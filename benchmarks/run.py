@@ -1,0 +1,322 @@
+"""Benchmark harness — one function per paper table/figure + the
+roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
+
+Paper artifacts covered:
+  Table 1  -> bench_table1_demo (SBOL-statistics demo workload: losses +
+              communication volume per protocol)
+  Fig. 1   -> bench_comm_modes (communication layer: per-mode exchange
+              latency), bench_codec (the Protobuf+Safetensors choice),
+              bench_he / bench_psi (protocol-layer crypto costs)
+  (ours)   -> bench_kernels (Pallas kernels vs oracles),
+              bench_roofline (dry-run roofline terms per arch x shape)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import pickle
+import threading
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _timeit(fn: Callable, n: int = 5) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_codec():
+    from repro.comm import codec
+    x = {"t": np.random.default_rng(0).normal(size=(512, 512))
+         .astype(np.float32)}
+    blob = codec.encode(x)
+    us_enc = _timeit(lambda: codec.encode(x), 20)
+    us_dec = _timeit(lambda: codec.decode(blob), 20)
+    us_pkl = _timeit(lambda: pickle.dumps(x), 20)
+    emit("codec_encode_1MB", us_enc, f"bytes={len(blob)}")
+    emit("codec_decode_1MB", us_dec, f"vs_pickle_x{us_pkl/max(us_enc,1):.2f}")
+
+
+def bench_comm_modes():
+    from repro.comm.local import ThreadBus
+    from repro.comm.sock import SocketCommunicator, local_addresses
+    payload = {"x": np.zeros((256, 256), np.float32)}   # 256 KiB
+
+    def roundtrip(ca, cb, n=10):
+        def echo():
+            for i in range(n):
+                m = cb.recv("a", f"m{i}")
+                cb.send("a", f"r{i}", m.payload)
+        t = threading.Thread(target=echo)
+        t.start()
+        t0 = time.perf_counter()
+        for i in range(n):
+            ca.send("b", f"m{i}", payload)
+            ca.recv("b", f"r{i}")
+        dt = (time.perf_counter() - t0) / n * 1e6
+        t.join()
+        return dt
+
+    bus = ThreadBus(["a", "b"])
+    us = roundtrip(bus.communicator("a"), bus.communicator("b"))
+    emit("comm_roundtrip_thread_256KiB", us, "mode=thread")
+    addrs = local_addresses(["a", "b"])
+    ca, cb = SocketCommunicator("a", addrs), SocketCommunicator("b", addrs)
+    try:
+        us = roundtrip(ca, cb)
+        emit("comm_roundtrip_socket_256KiB", us, "mode=socket")
+    finally:
+        ca.close(); cb.close()
+
+
+def bench_table1_demo(quick: bool):
+    from repro.configs.vfl_recsys import VFLRecsysConfig
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import MasterData, MemberData, VFLConfig
+    from repro.data.synthetic import make_recsys_silos
+    dcfg = VFLRecsysConfig().reduced()
+    data = make_recsys_silos(dcfg, seed=0)
+    master = MasterData(data.ids, data.labels.astype(np.float64),
+                        data.features)
+    members = [MemberData(i, x) for i, x in
+               zip(data.member_ids, data.member_features)]
+    for proto, epochs in (("linreg", 3), ("split_nn", 3)):
+        cfg = VFLConfig(protocol=proto, epochs=epochs, batch_size=64,
+                        lr=0.05, use_psi=False, embedding_dim=16)
+        t0 = time.perf_counter()
+        res = run_vfl(cfg, master, members, mode="thread")
+        dt = (time.perf_counter() - t0) * 1e6
+        h = res["master"]["history"]
+        emit(f"demo_{proto}", dt / max(len(h), 1),
+             f"loss {h[0]['loss']:.4f}->{h[-1]['loss']:.4f} "
+             f"bytes={res['master']['comm']['sent_bytes']}")
+    if not quick:
+        yb = master.y[:, :1]
+        cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32,
+                        lr=0.5, use_psi=False, he_bits=256)
+        t0 = time.perf_counter()
+        res = run_vfl(cfg, MasterData(master.ids, yb, master.x), members,
+                      mode="thread")
+        dt = (time.perf_counter() - t0) * 1e6
+        h = res["master"]["history"]
+        emit("demo_logreg_he", dt / max(len(h), 1),
+             f"loss {h[0]['loss']:.4f}->{h[-1]['loss']:.4f} "
+             f"decrypted={res['arbiter']['decrypted_values']}")
+
+
+def bench_he():
+    from repro.core import he
+    pub, priv = he.keygen(256)
+    us = _timeit(lambda: pub.encrypt_int(12345), 20)
+    emit("paillier_encrypt_256b", us, "key=256bit")
+    c = pub.encrypt_int(12345)
+    emit("paillier_decrypt_256b", _timeit(lambda: priv.decrypt_int(c), 20),
+         "")
+    emit("paillier_add", _timeit(lambda: pub.add(c, c), 50), "")
+
+
+def bench_psi():
+    from repro.core import psi
+    ids_a = [f"u{i}" for i in range(300)]
+    ids_b = [f"u{i}" for i in range(150, 450)]
+    us = _timeit(lambda: psi.salted_hash_intersection(ids_a, ids_b, "s"), 5)
+    emit("psi_salted_300ids", us, "inter=150")
+    us = _timeit(lambda: psi.dh_psi(ids_a[:60], ids_b[:60]), 2)
+    emit("psi_dh_60ids", us, "")
+
+
+def bench_kernels(quick: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.key(0), 5)
+    b, h, s, dh = 1, 4, 256, 64
+    q = jax.random.normal(ks[0], (b, h, s, dh))
+    k = jax.random.normal(ks[1], (b, 2, s, dh))
+    v = jax.random.normal(ks[2], (b, 2, s, dh))
+
+    def run():
+        return jax.block_until_ready(
+            ops.flash_attention(q, k, v, interpret=True))
+    err = float(jnp.abs(run() - ref.attention_ref(q, k, v)).max())
+    emit("kernel_flash_attention_256", _timeit(run, 3 if quick else 5),
+         f"max_err={err:.2e}")
+
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (1, 128, 64))) * 0.1
+    bm = jax.random.normal(ks[1], (1, 128, 8))
+    cm = jax.random.normal(ks[2], (1, 128, 8))
+    u = jax.random.normal(ks[3], (1, 128, 64))
+    a = -jnp.exp(jax.random.normal(ks[4], (64, 8)) * 0.5)
+
+    def run2():
+        return jax.block_until_ready(
+            ops.selective_scan(dt, bm, cm, u, a, interpret=True)[0])
+    y2, _ = ref.selective_scan_ref(dt, bm, cm, u, a)
+    err = float(jnp.abs(run2() - y2).max())
+    emit("kernel_selective_scan_128", _timeit(run2, 3), f"max_err={err:.2e}")
+
+    r_ = jax.random.normal(ks[0], (1, 2, 128, 32))
+    w_ = jax.nn.sigmoid(jax.random.normal(ks[3], (1, 2, 128, 32))) * 0.5 + 0.4
+    u_ = jax.random.normal(ks[4], (2, 32)) * 0.3
+
+    def run3():
+        return jax.block_until_ready(
+            ops.rwkv6_wkv(r_, r_, r_, w_, u_, interpret=True)[0])
+    y3, _ = ref.rwkv6_ref(r_, r_, r_, w_, u_)
+    err = float(jnp.abs(run3() - y3).max())
+    emit("kernel_rwkv6_wkv_128", _timeit(run3, 3), f"max_err={err:.2e}")
+
+    x = jax.random.normal(ks[0], (4, 128, 64))
+    wm = jax.random.normal(ks[1], (4, 64, 128))
+
+    def run4():
+        return jax.block_until_ready(
+            ops.moe_gmm(x, wm, block_d=64, interpret=True))
+    err = float(jnp.abs(run4() - ref.gmm_ref(x, wm)).max())
+    emit("kernel_moe_gmm_4x128", _timeit(run4, 3), f"max_err={err:.2e}")
+
+    xq = jax.random.normal(ks[2], (512, 128)) * 2
+
+    def run5():
+        return jax.block_until_ready(ops.quantize_int8(xq,
+                                                       interpret=True)[0])
+    qk = run5()
+    qr, _ = ref.quantize_int8_ref(xq)
+    emit("kernel_quantize_int8_512", _timeit(run5, 3),
+         f"exact={bool((qk == qr).all())}")
+
+
+def bench_vfl_scaling():
+    """Comm volume vs number of member silos (paper: multi-member VFL)."""
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import VFLConfig
+    from repro.data.vertical import vertical_partition
+    rng = np.random.default_rng(0)
+    n, items = 192, 2
+    for n_members in (1, 2, 4):
+        d = 6 + 4 * n_members
+        x = rng.normal(size=(n, d))
+        y = x @ rng.normal(size=(d, items)) * 0.3
+        ids = [f"u{i:05d}" for i in range(n)]
+        master, members = vertical_partition(
+            ids, x, y, widths=[4] * n_members, seed=1)
+        cfg = VFLConfig(protocol="split_nn", epochs=1, batch_size=48,
+                        lr=0.1, use_psi=False, embedding_dim=8,
+                        hidden=(16,))
+        t0 = time.perf_counter()
+        res = run_vfl(cfg, master, members, mode="thread")
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"vfl_scaling_{n_members}members", dt,
+             f"master_bytes={res['master']['comm']['sent_bytes']}")
+
+
+def bench_compression():
+    """int8 exchange compression: payload + quality deltas."""
+    import dataclasses
+
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import VFLConfig
+    from repro.data.vertical import vertical_partition
+    rng = np.random.default_rng(0)
+    n, d = 192, 12
+    x = rng.normal(size=(n, d))
+    y = (x @ rng.normal(size=(d, 3)) > 0).astype(np.float64)
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[5], seed=1)
+    cfg = VFLConfig(protocol="split_nn", epochs=3, batch_size=48, lr=0.1,
+                    use_psi=False, embedding_dim=8, hidden=(16,))
+    for compress in (False, True):
+        c = dataclasses.replace(cfg, compress=compress)
+        t0 = time.perf_counter()
+        res = run_vfl(c, master, members, mode="thread")
+        dt = (time.perf_counter() - t0) * 1e6
+        h = res["master"]["history"]
+        emit(f"vfl_exchange_compress={compress}", dt,
+             f"loss={h[-1]['loss']:.4f} "
+             f"member_bytes={res['member0']['comm']['sent_bytes']}")
+
+
+def bench_serving():
+    """Decode throughput per family (reduced archs, CPU)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import params as PRM, transformer as T
+    from repro.serve.engine import ServeEngine
+    for arch in ("h2o-danube-1.8b", "rwkv6-7b", "minicpm3-4b",
+                 "granite-moe-3b-a800m"):
+        cfg = get_config(arch).reduced()
+        params = PRM.init_tree(T.model_spec(cfg), jax.random.key(0),
+                               jnp.float32)
+        eng = ServeEngine(cfg, params, max_seq=64)
+        prompts = np.ones((4, 8), np.int32)
+        eng.generate(prompts, 4)          # warm the jit
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, 32)
+        dt = time.perf_counter() - t0
+        emit(f"serve_decode_{arch}", dt / 32 * 1e6,
+             f"tok_s={4 * 32 / dt:.1f}")
+
+
+def bench_roofline():
+    d = RESULTS / "dryrun"
+    if not d.exists():
+        print("# no dry-run results; run repro.launch.dryrun --all first")
+        return
+    from repro.launch.mesh import PEAK_FLOPS_BF16
+    for f in sorted(d.glob("*__single.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        step_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        mfu = rf["model_flops"] / (step_s * r["chips"] * PEAK_FLOPS_BF16) \
+            if step_s else 0.0
+        emit(f"roofline_{r['arch']}_{r['shape']}", step_s * 1e6,
+             f"dominant={rf['dominant'].replace('_s','')} "
+             f"roofline_mfu={mfu:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_codec()
+    bench_comm_modes()
+    bench_table1_demo(args.quick)
+    bench_he()
+    bench_psi()
+    bench_kernels(args.quick)
+    bench_vfl_scaling()
+    bench_compression()
+    bench_serving()
+    bench_roofline()
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "bench.csv").write_text(
+        "name,us_per_call,derived\n" + "\n".join(
+            f"{n},{u:.2f},{d}" for n, u, d in ROWS))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serve the encoder-decoder (whisper) family: batched transcription-
+style decoding against stub frame embeddings — exercises the
+cross-attention + enc-dec cache path through the public API.
+
+  PYTHONPATH=src python examples/asr_serve.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import params as PRM, transformer as T
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = get_config("whisper-large-v3").reduced()
+    key = jax.random.key(0)
+    params = PRM.init_tree(T.model_spec(cfg), key, jnp.float32)
+
+    batch = 4
+    # frontend stub: precomputed mel/conv frame embeddings per assignment
+    frames = jax.random.normal(
+        jax.random.fold_in(key, 1),
+        (batch, cfg.encoder.n_frames, cfg.d_model), jnp.float32) * 0.02
+    t0 = time.perf_counter()
+    memory = T.encode(cfg, params, frames)
+    enc_dt = time.perf_counter() - t0
+
+    engine = ServeEngine(cfg, params, max_seq=48)
+    bos = np.full((batch, 1), 1, np.int32)
+    t0 = time.perf_counter()
+    out = engine.generate(bos, 32, temperature=0.7, memory=memory)
+    dec_dt = time.perf_counter() - t0
+    print(f"encoded {batch}x{cfg.encoder.n_frames} frames in {enc_dt:.2f}s; "
+          f"decoded {out.shape} in {dec_dt:.2f}s "
+          f"({batch * 32 / dec_dt:.1f} tok/s)")
+    print("sample:", out[0, 1:12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.comm.base import Message, PartyCommunicator, CommStats  # noqa: F401
+from repro.comm.local import ThreadBus, ThreadCommunicator          # noqa: F401

@@ -1,0 +1,120 @@
+"""Communication layer: the MPI-like ``PartyCommunicator`` interface.
+
+The paper's central abstraction (§2): agents exchange tensors through a
+send/recv interface whose *implementation* (thread queue, process pipe,
+TCP socket, TPU collective) is swapped without touching protocol code.
+Every send is metered (payload bytes via the safetensors codec, wall
+time) — the paper's "comprehensive logging of payload, exchange time".
+"""
+from __future__ import annotations
+
+import abc
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.comm import codec
+
+Payload = Dict[str, np.ndarray]
+
+
+@dataclass
+class Message:
+    sender: str
+    recipient: str
+    tag: str
+    payload: Payload
+    meta: Dict[str, str] = field(default_factory=dict)
+
+    def tensor(self, name: str = "x") -> np.ndarray:
+        return self.payload[name]
+
+
+@dataclass
+class CommStats:
+    sent_messages: int = 0
+    sent_bytes: int = 0
+    recv_messages: int = 0
+    recv_wait_s: float = 0.0
+    send_s: float = 0.0
+    per_tag_bytes: Dict[str, int] = field(default_factory=dict)
+
+    def record_send(self, tag: str, nbytes: int, dt: float):
+        self.sent_messages += 1
+        self.sent_bytes += nbytes
+        self.send_s += dt
+        self.per_tag_bytes[tag] = self.per_tag_bytes.get(tag, 0) + nbytes
+
+    def record_recv(self, wait: float):
+        self.recv_messages += 1
+        self.recv_wait_s += wait
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "sent_messages": self.sent_messages,
+            "sent_bytes": self.sent_bytes,
+            "recv_messages": self.recv_messages,
+            "recv_wait_s": round(self.recv_wait_s, 4),
+            "send_s": round(self.send_s, 4),
+            "per_tag_bytes": dict(self.per_tag_bytes),
+        }
+
+
+class PartyCommunicator(abc.ABC):
+    """MPI-like send/recv among named agents.
+
+    ``world`` lists every agent id ("master", "member0", ..., "arbiter").
+    """
+
+    def __init__(self, me: str, world: Sequence[str]):
+        self.me = me
+        self.world = list(world)
+        self.stats = CommStats()
+
+    # -- implementation hooks ------------------------------------------------
+    @abc.abstractmethod
+    def _send(self, msg: Message, raw: bytes) -> None:
+        ...
+
+    @abc.abstractmethod
+    def _recv(self, frm: str, tag: str) -> Message:
+        ...
+
+    # -- public API ----------------------------------------------------------
+    def send(self, to: str, tag: str, payload: Payload,
+             meta: Optional[Dict[str, str]] = None) -> None:
+        payload = {k: np.asarray(v) for k, v in payload.items()}
+        msg = Message(self.me, to, tag, payload, dict(meta or {}))
+        t0 = time.perf_counter()
+        raw = codec.encode(payload, {"sender": self.me, "tag": tag,
+                                     **msg.meta})
+        self._send(msg, raw)
+        self.stats.record_send(tag, len(raw), time.perf_counter() - t0)
+
+    def recv(self, frm: str, tag: str) -> Message:
+        t0 = time.perf_counter()
+        msg = self._recv(frm, tag)
+        self.stats.record_recv(time.perf_counter() - t0)
+        return msg
+
+    def broadcast(self, tag: str, payload: Payload,
+                  targets: Optional[Sequence[str]] = None) -> None:
+        for t in (targets if targets is not None else self.world):
+            if t != self.me:
+                self.send(t, tag, payload)
+
+    def gather(self, frm: Sequence[str], tag: str) -> List[Message]:
+        return [self.recv(f, tag) for f in frm]
+
+    def scatter(self, tag: str, payloads: Dict[str, Payload]) -> None:
+        for to, payload in payloads.items():
+            self.send(to, tag, payload)
+
+    def close(self) -> None:      # pragma: no cover - overridden as needed
+        pass
+
+    @property
+    def members(self) -> List[str]:
+        return [w for w in self.world if w.startswith("member")]

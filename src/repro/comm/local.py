@@ -1,0 +1,52 @@
+"""In-process thread-based communicator (the paper's local debug mode).
+
+A shared :class:`ThreadBus` holds one mailbox per agent; messages go
+through the safetensors codec round-trip anyway so payload sizes and
+(de)serialization behaviour match the distributed modes exactly — only
+the transport differs. This is what makes "debug in the IDE, deploy on
+the cluster" seamless.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import defaultdict
+from typing import Dict, Sequence, Tuple
+
+from repro.comm import codec
+from repro.comm.base import Message, PartyCommunicator
+
+
+class ThreadBus:
+    def __init__(self, world: Sequence[str]):
+        self.world = list(world)
+        self._boxes: Dict[str, "queue.Queue[bytes]"] = {
+            w: queue.Queue() for w in world}
+
+    def communicator(self, me: str) -> "ThreadCommunicator":
+        return ThreadCommunicator(me, self)
+
+
+class ThreadCommunicator(PartyCommunicator):
+    def __init__(self, me: str, bus: ThreadBus):
+        super().__init__(me, bus.world)
+        self._bus = bus
+        self._pending: Dict[Tuple[str, str], list] = defaultdict(list)
+        self._timeout = 120.0
+
+    def _send(self, msg: Message, raw: bytes) -> None:
+        self._bus._boxes[msg.recipient].put(raw)
+
+    def _recv(self, frm: str, tag: str) -> Message:
+        key = (frm, tag)
+        while True:
+            if self._pending[key]:
+                return self._pending[key].pop(0)
+            raw = self._bus._boxes[self.me].get(timeout=self._timeout)
+            payload, meta = codec.decode(raw)
+            sender = meta.pop("sender")
+            mtag = meta.pop("tag")
+            msg = Message(sender, self.me, mtag, payload, meta)
+            if (sender, mtag) == key:
+                return msg
+            self._pending[(sender, mtag)].append(msg)

@@ -1,0 +1,49 @@
+"""Multi-process communicator (the paper's third execution mode).
+
+One ``multiprocessing.Queue`` mailbox per agent; messages are the codec
+blobs (bytes pickle cheaply and keep payload accounting identical to the
+other modes). Agent functions must be module-level picklables.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+from collections import defaultdict
+from typing import Dict, Sequence, Tuple
+
+from repro.comm import codec
+from repro.comm.base import Message, PartyCommunicator
+
+
+class ProcessBus:
+    def __init__(self, world: Sequence[str], ctx=None):
+        self.world = list(world)
+        ctx = ctx or mp.get_context("spawn")
+        self.boxes: Dict[str, mp.Queue] = {w: ctx.Queue() for w in world}
+
+    def communicator(self, me: str) -> "ProcessCommunicator":
+        return ProcessCommunicator(me, self)
+
+
+class ProcessCommunicator(PartyCommunicator):
+    def __init__(self, me: str, bus: ProcessBus):
+        super().__init__(me, bus.world)
+        self._boxes = bus.boxes
+        self._pending: Dict[Tuple[str, str], list] = defaultdict(list)
+        self._timeout = 240.0
+
+    def _send(self, msg: Message, raw: bytes) -> None:
+        self._boxes[msg.recipient].put(raw)
+
+    def _recv(self, frm: str, tag: str) -> Message:
+        key = (frm, tag)
+        while True:
+            if self._pending[key]:
+                return self._pending[key].pop(0)
+            raw = self._boxes[self.me].get(timeout=self._timeout)
+            payload, meta = codec.decode(raw)
+            sender = meta.pop("sender")
+            mtag = meta.pop("tag")
+            msg = Message(sender, self.me, mtag, payload, meta)
+            if (sender, mtag) == key:
+                return msg
+            self._pending[(sender, mtag)].append(msg)

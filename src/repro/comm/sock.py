@@ -1,0 +1,114 @@
+"""Distributed TCP communicator — the offline stand-in for the paper's
+gRPC transport (gRPC adds framing/auth on top of the same safetensors
+payloads; semantics are identical for protocol purposes).
+
+Every agent runs a listener thread; messages are length-prefixed
+safetensors blobs. Agents connect lazily and reuse sockets. Works across
+hosts; in tests everything binds to 127.0.0.1.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+from collections import defaultdict
+from typing import Dict, Sequence, Tuple
+
+from repro.comm import codec
+from repro.comm.base import Message, PartyCommunicator
+
+
+def _recv_exact(conn: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = conn.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("socket closed")
+        buf += chunk
+    return buf
+
+
+class SocketCommunicator(PartyCommunicator):
+    def __init__(self, me: str, addresses: Dict[str, Tuple[str, int]]):
+        """addresses: agent id -> (host, port) for EVERY agent."""
+        super().__init__(me, list(addresses))
+        self._addr = dict(addresses)
+        self._pending: Dict[Tuple[str, str], list] = defaultdict(list)
+        self._inbox: "list" = []
+        self._cv = threading.Condition()
+        self._out: Dict[str, socket.socket] = {}
+        self._timeout = 120.0
+        host, port = self._addr[me]
+        self._server = socket.create_server((host, port), backlog=16)
+        self._alive = True
+        self._listener = threading.Thread(target=self._listen, daemon=True)
+        self._listener.start()
+
+    # -- server side ---------------------------------------------------------
+    def _listen(self):
+        while self._alive:
+            try:
+                conn, _ = self._server.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            while True:
+                (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
+                raw = _recv_exact(conn, n)
+                payload, meta = codec.decode(raw)
+                sender = meta.pop("sender")
+                tag = meta.pop("tag")
+                msg = Message(sender, self.me, tag, payload, meta)
+                with self._cv:
+                    self._pending[(sender, tag)].append(msg)
+                    self._cv.notify_all()
+        except (ConnectionError, OSError):
+            return
+
+    # -- client side ---------------------------------------------------------
+    def _conn_to(self, to: str) -> socket.socket:
+        if to not in self._out:
+            self._out[to] = socket.create_connection(self._addr[to],
+                                                     timeout=self._timeout)
+        return self._out[to]
+
+    def _send(self, msg: Message, raw: bytes) -> None:
+        conn = self._conn_to(msg.recipient)
+        conn.sendall(struct.pack("<Q", len(raw)) + raw)
+
+    def _recv(self, frm: str, tag: str) -> Message:
+        key = (frm, tag)
+        with self._cv:
+            ok = self._cv.wait_for(lambda: bool(self._pending[key]),
+                                   timeout=self._timeout)
+            if not ok:
+                raise TimeoutError(f"{self.me}: no message {key}")
+            return self._pending[key].pop(0)
+
+    def close(self) -> None:
+        self._alive = False
+        try:
+            self._server.close()
+        except OSError:
+            pass
+        for c in self._out.values():
+            try:
+                c.close()
+            except OSError:
+                pass
+
+
+def local_addresses(world: Sequence[str], base_port: int = 0
+                    ) -> Dict[str, Tuple[str, int]]:
+    """Allocate loopback addresses with OS-assigned free ports."""
+    addrs: Dict[str, Tuple[str, int]] = {}
+    for w in world:
+        s = socket.socket()
+        s.bind(("127.0.0.1", base_port))
+        addrs[w] = ("127.0.0.1", s.getsockname()[1])
+        s.close()
+    return addrs

@@ -1,0 +1,157 @@
+"""Paillier additively-homomorphic encryption (the paper's HE layer).
+
+Pure-python big-int implementation: keygen (Miller-Rabin primes),
+encrypt/decrypt, ciphertext addition, plaintext scalar multiplication,
+and a fixed-point codec for float tensors. Used by the arbitered
+logistic-regression protocol: the master encrypts residuals, members
+compute encrypted gradients (X^T r under HE = scalar-mult + add), the
+arbiter (key holder) decrypts.
+
+TPU note (DESIGN.md): 2048-bit modular arithmetic has no MXU/VPU
+analogue — this layer is CPU-side by necessity; the device-path privacy
+equivalent is mask-based secure aggregation (secure_agg.py).
+"""
+from __future__ import annotations
+
+import math
+import secrets
+from dataclasses import dataclass
+from typing import Iterable, List, Tuple
+
+import numpy as np
+
+_SMALL_PRIMES = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47]
+
+
+def _is_probable_prime(n: int, rounds: int = 24) -> bool:
+    if n < 2:
+        return False
+    for p in _SMALL_PRIMES:
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for _ in range(rounds):
+        a = secrets.randbelow(n - 3) + 2
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = pow(x, 2, n)
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def _random_prime(bits: int) -> int:
+    while True:
+        cand = secrets.randbits(bits) | (1 << (bits - 1)) | 1
+        if _is_probable_prime(cand):
+            return cand
+
+
+@dataclass(frozen=True)
+class PublicKey:
+    n: int
+
+    @property
+    def n_sq(self) -> int:
+        return self.n * self.n
+
+    def encrypt_int(self, m: int) -> int:
+        m %= self.n
+        r = secrets.randbelow(self.n - 2) + 1
+        # g = n + 1  =>  g^m = 1 + m*n (mod n^2)
+        return ((1 + m * self.n) * pow(r, self.n, self.n_sq)) % self.n_sq
+
+    def add(self, c1: int, c2: int) -> int:
+        return (c1 * c2) % self.n_sq
+
+    def mul_scalar(self, c: int, k: int) -> int:
+        return pow(c, k % self.n, self.n_sq)
+
+
+@dataclass(frozen=True)
+class PrivateKey:
+    pub: PublicKey
+    lam: int
+    mu: int
+
+    def decrypt_int(self, c: int) -> int:
+        n = self.pub.n
+        x = pow(c, self.lam, self.pub.n_sq)
+        m = ((x - 1) // n * self.mu) % n
+        return m if m <= n // 2 else m - n      # centered representative
+
+
+def keygen(bits: int = 512) -> Tuple[PublicKey, PrivateKey]:
+    while True:
+        p = _random_prime(bits // 2)
+        q = _random_prime(bits // 2)
+        if p != q:
+            break
+    n = p * q
+    lam = math.lcm(p - 1, q - 1)
+    pub = PublicKey(n)
+    # mu = (L(g^lam mod n^2))^-1 mod n; with g = n+1, L(g^lam) = lam mod n
+    mu = pow(lam % n, -1, n)
+    return pub, PrivateKey(pub, lam, mu)
+
+
+# ---------------------------------------------------------------------------
+# fixed-point float vectors
+# ---------------------------------------------------------------------------
+
+SCALE_BITS = 32
+
+
+def encode_fixed(x: np.ndarray, scale_bits: int = SCALE_BITS) -> List[int]:
+    flat = np.asarray(x, np.float64).ravel()
+    s = 1 << scale_bits
+    return [int(round(float(v) * s)) for v in flat]
+
+
+def decode_fixed(vals: Iterable[int], shape,
+                 scale_bits: int = SCALE_BITS) -> np.ndarray:
+    s = float(1 << scale_bits)
+    arr = np.array([v / s for v in vals], np.float64)
+    return arr.reshape(shape)
+
+
+def encrypt_vector(pub: PublicKey, x: np.ndarray) -> np.ndarray:
+    return np.array([pub.encrypt_int(m) for m in encode_fixed(x)],
+                    dtype=object).reshape(np.shape(x))
+
+
+def decrypt_vector(priv: PrivateKey, c: np.ndarray,
+                   scale_bits: int = SCALE_BITS) -> np.ndarray:
+    flat = [priv.decrypt_int(int(v)) for v in np.ravel(c)]
+    return decode_fixed(flat, np.shape(c), scale_bits)
+
+
+def add_cipher(pub: PublicKey, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.array([pub.add(int(x), int(y))
+                     for x, y in zip(np.ravel(a), np.ravel(b))],
+                    dtype=object).reshape(np.shape(a))
+
+
+def matvec_cipher(pub: PublicKey, x_plain: np.ndarray,
+                  c_vec: np.ndarray) -> np.ndarray:
+    """X^T @ Enc(r) done homomorphically: Enc(sum_i X[i,j] * r[i]).
+
+    x_plain: (n, d) float; c_vec: (n,) ciphertexts (fixed-point encoded).
+    Result: (d,) ciphertexts at DOUBLE scale (2*SCALE_BITS).
+    """
+    n, d = x_plain.shape
+    x_int = [encode_fixed(x_plain[:, j]) for j in range(d)]
+    out = []
+    for j in range(d):
+        acc = pub.encrypt_int(0)
+        for i in range(n):
+            acc = pub.add(acc, pub.mul_scalar(int(c_vec[i]), x_int[j][i]))
+        out.append(acc)
+    return np.array(out, dtype=object)

@@ -1,0 +1,154 @@
+"""Agent roles (PartyMaster / PartyMember / Arbiter) and the execution-
+mode runner.
+
+``run_vfl(...)`` runs one protocol across all agents in any of the three
+paper modes — "thread" (in-process queues), "process"
+(multiprocessing), "socket" (TCP + safetensors framing) — with identical
+protocol code; mode equivalence is a tested claim (EXPERIMENTS.md
+§Functional). A fourth beyond-paper mode, the TPU mesh step, lives in
+core/vfl_step.py.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.comm.base import PartyCommunicator
+from repro.comm.local import ThreadBus
+from repro.comm.process import ProcessBus
+from repro.comm.sock import SocketCommunicator, local_addresses
+from repro.core.protocols import PROTOCOLS, VFLConfig
+from repro.core.protocols.base import MasterData, MemberData
+
+# ensure built-in protocols register
+from repro.core.protocols import linreg as _linreg        # noqa: F401
+from repro.core.protocols import logreg as _logreg        # noqa: F401
+from repro.core.protocols import split_nn as _split_nn    # noqa: F401
+
+
+@dataclass
+class VFLAgent:
+    """Explicit role object (paper Fig. 1). Thin wrapper over the
+    functional protocol layer, for API fidelity with Stalactite."""
+
+    comm: PartyCommunicator
+    cfg: VFLConfig
+
+    def _fn(self, role: str):
+        return PROTOCOLS[self.cfg.protocol][role]
+
+
+class PartyMaster(VFLAgent):
+    def fit(self, data: MasterData) -> Dict[str, Any]:
+        return self._fn("master")(self.comm, data, self.cfg)
+
+
+class PartyMember(VFLAgent):
+    def fit(self, data: MemberData) -> Dict[str, Any]:
+        return self._fn("member")(self.comm, data, self.cfg)
+
+
+class Arbiter(VFLAgent):
+    def serve(self) -> Dict[str, Any]:
+        return self._fn("arbiter")(self.comm, None, self.cfg)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def world_for(cfg: VFLConfig, n_members: int) -> List[str]:
+    world = ["master"] + [f"member{i}" for i in range(n_members)]
+    if PROTOCOLS[cfg.protocol]["needs_arbiter"]:
+        world.append("arbiter")
+    return world
+
+
+def _role_entry(role: str, comm: PartyCommunicator, cfg: VFLConfig,
+                data, out: Dict[str, Any]):
+    proto = PROTOCOLS[cfg.protocol]
+    try:
+        if role == "master":
+            out[role] = proto["master"](comm, data, cfg)
+        elif role == "arbiter":
+            out[role] = proto["arbiter"](comm, data, cfg)
+        else:
+            out[role] = proto["member"](comm, data, cfg)
+    except BaseException as e:   # propagate to the runner
+        out[role] = {"error": e}
+        raise
+    finally:
+        comm.close()
+
+
+def _mp_entry(role: str, bus_boxes, world, cfg, data, q):
+    # module-level for picklability (spawn)
+    from repro.comm.process import ProcessBus, ProcessCommunicator
+    bus = ProcessBus.__new__(ProcessBus)
+    bus.world = world
+    bus.boxes = bus_boxes
+    comm = ProcessCommunicator(role, bus)
+    out: Dict[str, Any] = {}
+    _role_entry(role, comm, cfg, data, out)
+    q.put((role, out[role]))
+
+
+def run_vfl(cfg: VFLConfig, master_data: MasterData,
+            member_datas: List[MemberData], mode: str = "thread",
+            ) -> Dict[str, Any]:
+    """Run a full VFL job (matching + training) in the given mode."""
+    world = world_for(cfg, len(member_datas))
+    datas: Dict[str, Any] = {"master": master_data}
+    for i, md in enumerate(member_datas):
+        datas[f"member{i}"] = md
+    if "arbiter" in world:
+        datas["arbiter"] = None
+
+    results: Dict[str, Any] = {}
+    if mode == "thread":
+        bus = ThreadBus(world)
+        threads = [threading.Thread(
+            target=_role_entry,
+            args=(w, bus.communicator(w), cfg, datas[w], results))
+            for w in world]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+    elif mode == "socket":
+        addrs = local_addresses(world)
+        comms = {w: SocketCommunicator(w, addrs) for w in world}
+        threads = [threading.Thread(
+            target=_role_entry, args=(w, comms[w], cfg, datas[w], results))
+            for w in world]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+    elif mode == "process":
+        ctx = mp.get_context("spawn")
+        bus = ProcessBus(world, ctx)
+        q = ctx.Queue()
+        procs = [ctx.Process(target=_mp_entry,
+                             args=(w, bus.boxes, world, cfg, datas[w], q))
+                 for w in world]
+        for p in procs:
+            p.start()
+        for _ in world:
+            role, res = q.get(timeout=600)
+            results[role] = res
+        for p in procs:
+            p.join(timeout=60)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    for role, res in results.items():
+        if isinstance(res, dict) and isinstance(res.get("error"),
+                                                BaseException):
+            raise RuntimeError(f"agent {role} failed") from res["error"]
+    missing = [w for w in world if w not in results]
+    if missing:
+        raise RuntimeError(f"agents did not finish: {missing}")
+    return results

@@ -1,0 +1,1 @@
+from repro.core.protocols.base import VFLConfig, PROTOCOLS  # noqa: F401

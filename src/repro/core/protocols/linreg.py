@@ -1,0 +1,74 @@
+"""Arbiterless VFL linear regression (paper §2 protocol layer).
+
+Per batch: every party computes its partial prediction z_p = X_p w_p and
+sends it to the master; the master (who holds labels and its own feature
+slice) sums partials, computes the residual, and broadcasts it; each
+party updates its own weight slice locally from X_p^T r. No raw features
+ever leave a party.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.comm.base import PartyCommunicator
+from repro.core.protocols import base
+from repro.core.protocols.base import (MasterData, MemberData, VFLConfig,
+                                       batches, master_match, member_match,
+                                       register)
+
+
+def master_fn(comm: PartyCommunicator, data: MasterData,
+              cfg: VFLConfig) -> Dict:
+    order = master_match(comm, data, cfg)
+    y = base._select(data.ids, order, data.y).astype(np.float64)
+    x = base._select(data.ids, order, data.x).astype(np.float64) \
+        if data.x is not None else None
+    n, items = y.shape
+    comm.broadcast("linreg/setup", {"items": np.array([items])},
+                   targets=comm.members)
+    w = np.zeros((x.shape[1], items)) if x is not None else None
+    history: List[Dict] = []
+    step = 0
+    for epoch in range(cfg.epochs):
+        for rows in batches(n, cfg, epoch):
+            zb = np.zeros((len(rows), items))
+            if x is not None:
+                zb += x[rows] @ w
+            for msg in comm.gather(comm.members, f"linreg/z/{step}"):
+                zb += msg.tensor("z")
+            r = (zb - y[rows]) / len(rows)
+            comm.broadcast(f"linreg/resid/{step}", {"r": r},
+                           targets=comm.members)
+            if x is not None:
+                w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
+            loss = float(0.5 * np.mean((zb - y[rows]) ** 2))
+            if step % cfg.record_every == 0:
+                history.append({"step": step, "epoch": epoch, "loss": loss})
+            step += 1
+    comm.broadcast("linreg/done", {"ok": np.array([1])},
+                   targets=comm.members)
+    return {"history": history, "w_master": w, "n_common": n,
+            "comm": comm.stats.as_dict()}
+
+
+def member_fn(comm: PartyCommunicator, data: MemberData,
+              cfg: VFLConfig) -> Dict:
+    order = member_match(comm, data, cfg)
+    x = base._select(data.ids, order, data.x).astype(np.float64)
+    n = len(order)
+    items = int(comm.recv("master", "linreg/setup").tensor("items")[0])
+    w = np.zeros((x.shape[1], items))
+    step = 0
+    for epoch in range(cfg.epochs):
+        for rows in batches(n, cfg, epoch):
+            comm.send("master", f"linreg/z/{step}", {"z": x[rows] @ w})
+            r = comm.recv("master", f"linreg/resid/{step}").tensor("r")
+            w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
+            step += 1
+    comm.recv("master", "linreg/done")
+    return {"w": w, "comm": comm.stats.as_dict()}
+
+
+register("linreg", master_fn, member_fn)

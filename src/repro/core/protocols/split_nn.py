@@ -1,0 +1,183 @@
+"""Split-learning VFL protocol (paper §2: "neural networks-based
+algorithms enabled with a split-learning approach").
+
+Members own bottom MLPs over their feature slices; the master owns the
+top model and labels. Per batch:
+
+1. members send bottom activations u_p = f_p(X_p),
+2. master sums aggregated embedding u = u_master + sum_p u_p, runs the
+   top model, computes the multi-label BCE loss,
+3. master backprops and returns du_p to each member (the only gradient
+   signal that crosses the boundary),
+4. members apply their bottom VJP locally.
+
+Everything is jax (jit'd per party), so the same protocol code is also
+what the mesh-mode VFL step shards over pods (core/vfl_step.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.base import PartyCommunicator
+from repro.core.protocols import base
+from repro.core.protocols.base import (MasterData, MemberData, VFLConfig,
+                                       batches, master_match, member_match,
+                                       register)
+
+
+def mlp_init(key, dims: Tuple[int, ...]) -> List[Dict[str, jax.Array]]:
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        layers.append({
+            "w": jax.random.normal(k, (a, b), jnp.float32) / np.sqrt(a),
+            "b": jnp.zeros((b,), jnp.float32),
+        })
+    return layers
+
+
+def mlp_apply(params, x, final_act: bool = False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _bce(logits, y):
+    return jnp.mean(jnp.clip(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _master_fwd_bwd(top_params, bottom_params, u_members, x_m, y, lr):
+    """Returns (loss, new_top, new_bottom, du_members)."""
+    def fwd(top, bottom, u_ms):
+        u = mlp_apply(bottom, x_m, final_act=True)
+        for um in u_ms:
+            u = u + um
+        logits = mlp_apply(top, u)
+        return _bce(logits, y)
+
+    loss, grads = jax.value_and_grad(fwd, argnums=(0, 1, 2))(
+        top_params, bottom_params, u_members)
+    g_top, g_bottom, g_u = grads
+    new_top = jax.tree.map(lambda p, g: p - lr * g, top_params, g_top)
+    new_bottom = jax.tree.map(lambda p, g: p - lr * g, bottom_params,
+                              g_bottom)
+    return loss, new_top, new_bottom, g_u
+
+
+@jax.jit
+def _member_fwd(params, x):
+    return mlp_apply(params, x, final_act=True)
+
+
+@jax.jit
+def _member_bwd(params, x, du, lr):
+    _, vjp = jax.vjp(lambda p: mlp_apply(p, x, final_act=True), params)
+    (g,) = vjp(du)
+    return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+
+def master_fn(comm: PartyCommunicator, data: MasterData,
+              cfg: VFLConfig) -> Dict:
+    order = master_match(comm, data, cfg)
+    y = jnp.asarray(base._select(data.ids, order, data.y), jnp.float32)
+    x = jnp.asarray(base._select(data.ids, order, data.x), jnp.float32)
+    n, items = y.shape
+    e = cfg.embedding_dim
+    key = jax.random.key(cfg.seed)
+    bottom = mlp_init(jax.random.fold_in(key, 0),
+                      (x.shape[1],) + cfg.hidden + (e,))
+    top = mlp_init(jax.random.fold_in(key, 1), (e,) + cfg.hidden + (items,))
+    history: List[Dict] = []
+    step = 0
+    lr = jnp.float32(cfg.lr)
+    from repro.core import compression
+    ef = compression.ErrorFeedback()
+    for epoch in range(cfg.epochs):
+        for rows in batches(n, cfg, epoch):
+            msgs = comm.gather(comm.members, f"splitnn/u/{step}")
+            if cfg.compress:
+                u_members = tuple(
+                    jnp.asarray(compression.unpack(m.payload), jnp.float32)
+                    for m in msgs)
+            else:
+                u_members = tuple(jnp.asarray(m.tensor("u"), jnp.float32)
+                                  for m in msgs)
+            loss, top, bottom, g_u = _master_fwd_bwd(
+                top, bottom, u_members, x[rows], y[rows], lr)
+            for mname, du in zip(comm.members, g_u):
+                if cfg.compress:
+                    q, scale = ef.compress(mname, np.asarray(du))
+                    comm.send(mname, f"splitnn/du/{step}",
+                              compression.payload(q, scale))
+                else:
+                    comm.send(mname, f"splitnn/du/{step}",
+                              {"du": np.asarray(du)})
+            if step % cfg.record_every == 0:
+                history.append({"step": step, "epoch": epoch,
+                                "loss": float(loss)})
+            step += 1
+    comm.broadcast("splitnn/done", {"ok": np.array([1])},
+                   targets=comm.members)
+    return {"history": history, "n_common": n, "order": order,
+            "top": jax.tree.map(np.asarray, top),
+            "bottom": jax.tree.map(np.asarray, bottom),
+            "comm": comm.stats.as_dict()}
+
+
+def member_fn(comm: PartyCommunicator, data: MemberData,
+              cfg: VFLConfig) -> Dict:
+    order = member_match(comm, data, cfg)
+    x = jnp.asarray(base._select(data.ids, order, data.x), jnp.float32)
+    n = len(order)
+    # member index determines its init stream (derived from its id)
+    midx = int(comm.me.replace("member", "")) + 2
+    params = mlp_init(jax.random.fold_in(jax.random.key(cfg.seed), midx),
+                      (x.shape[1],) + cfg.hidden + (cfg.embedding_dim,))
+    step = 0
+    lr = jnp.float32(cfg.lr)
+    from repro.core import compression
+    ef = compression.ErrorFeedback()
+    masker = None
+    if cfg.secure_agg:
+        if cfg.compress:
+            raise ValueError("secure_agg masks do not survive independent "
+                             "quantization; choose one")
+        from repro.core.secure_agg_protocol import PairwiseMasker
+        masker = PairwiseMasker(comm, comm.me, comm.members)
+    for epoch in range(cfg.epochs):
+        for rows in batches(n, cfg, epoch):
+            xb = x[rows]
+            u = _member_fwd(params, xb)
+            if masker is not None:
+                u = jnp.asarray(np.asarray(u)
+                                + masker.mask(step, np.asarray(u).shape))
+            if cfg.compress:
+                q, scale = ef.compress("u", np.asarray(u))
+                comm.send("master", f"splitnn/u/{step}",
+                          compression.payload(q, scale))
+                du = jnp.asarray(compression.unpack(
+                    comm.recv("master", f"splitnn/du/{step}").payload),
+                    jnp.float32)
+            else:
+                comm.send("master", f"splitnn/u/{step}",
+                          {"u": np.asarray(u)})
+                du = jnp.asarray(
+                    comm.recv("master", f"splitnn/du/{step}").tensor("du"),
+                    jnp.float32)
+            params = _member_bwd(params, xb, du, lr)
+            step += 1
+    comm.recv("master", "splitnn/done")
+    return {"params": jax.tree.map(np.asarray, params),
+            "comm": comm.stats.as_dict()}
+
+
+register("split_nn", master_fn, member_fn)

@@ -1,0 +1,50 @@
+"""Mask-based secure aggregation — the TPU-idiomatic HE substitute.
+
+Pairwise PRG masks (Bonawitz et al. style): parties i<j share a seed;
+party i adds +PRG(seed_ij), party j adds -PRG(seed_ij). Each individual
+contribution is information-theoretically masked from the aggregator,
+while the SUM over all parties is exact because masks cancel.
+
+Runs at device speed (jax.random.fold_in / normal) so the mesh-mode VFL
+step can mask member embeddings before the psum over the ``pod`` axis —
+the property VFL needs ("server sees only the aggregate") with zero
+big-int cost. Masks are fp32 and cancellation is exact (same values
+added and subtracted).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _pair_key(base: jax.Array, i: int, j: int) -> jax.Array:
+    lo, hi = (i, j) if i < j else (j, i)
+    return jax.random.fold_in(jax.random.fold_in(base, lo), hi)
+
+
+def pairwise_mask(base_key: jax.Array, party: int, n_parties: int,
+                  shape, dtype=jnp.float32) -> jax.Array:
+    """Net mask party ``party`` must ADD to its contribution."""
+    mask = jnp.zeros(shape, jnp.float32)
+    for other in range(n_parties):
+        if other == party:
+            continue
+        m = jax.random.normal(_pair_key(base_key, party, other), shape,
+                              jnp.float32)
+        mask = mask + m if party < other else mask - m
+    return mask.astype(dtype)
+
+
+def mask_contribution(base_key: jax.Array, party: int, n_parties: int,
+                      x: jax.Array) -> jax.Array:
+    return x + pairwise_mask(base_key, party, n_parties, x.shape, x.dtype)
+
+
+def aggregate(masked: Sequence[jax.Array]) -> jax.Array:
+    """Sum of masked contributions == sum of plaintexts (masks cancel)."""
+    out = masked[0]
+    for m in masked[1:]:
+        out = out + m
+    return out

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticRecsys, make_recsys_silos, make_lm_batches,
+)
+from repro.data.vertical import vertical_partition  # noqa: F401

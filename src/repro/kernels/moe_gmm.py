@@ -1,0 +1,66 @@
+"""Grouped expert matmul (MoE) Pallas TPU kernel.
+
+Computes out[e] = x[e] @ w[e] for every expert's capacity buffer — the
+compute hot-spot of capacity-based MoE dispatch. TPU adaptation: each
+(capacity-block x f-block) output tile accumulates over d-blocks on the
+MXU with an fp32 VMEM scratch accumulator; the expert dimension is an
+outer parallel grid axis, so expert-parallel sharding composes by simply
+sharding the grid.
+
+Grid: (e, c/block_c, f/block_f, d/block_d), reduction dim last
+(sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(idd == n_d - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+            block_f: int = 128, block_d: int = 256,
+            interpret: bool = False) -> jax.Array:
+    """x: (e, c, d); w: (e, d, f) -> (e, c, f)."""
+    e, c, d = x.shape
+    f = w.shape[-1]
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    assert c % block_c == 0 and f % block_f == 0 and d % block_d == 0
+    grid = (e, c // block_c, f // block_f, d // block_d)
+
+    kernel = functools.partial(_kernel, n_d=d // block_d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda ie, ic, if_, id_: (ie, ic, id_)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda ie, ic, if_, id_: (ie, id_, if_)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ie, ic, if_, id_: (ie, ic, if_)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

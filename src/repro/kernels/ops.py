@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs in Python via the interpreter); on a real TPU the same calls
+compile to Mosaic. ``interpret`` defaults to True iff no TPU is present,
+so the same code path works in both environments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _q
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rwkv6_wkv as _wkv
+from repro.kernels import selective_scan as _ssm
+
+
+@functools.cache
+def default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    """q: (b, h, s, dh); k/v: (b, kvh, s, dh)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk",
+                                             "interpret"))
+def selective_scan(dt, bmat, cmat, u, a, *, block_d: int = 256,
+                   chunk: int = 64, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _ssm.selective_scan(dt, bmat, cmat, u, a, block_d=block_d,
+                               chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 64,
+              interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _wkv.rwkv6_wkv(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "block_d", "interpret"))
+def moe_gmm(x, w, *, block_c: int = 128, block_f: int = 128,
+            block_d: int = 256, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _gmm.moe_gmm(x, w, block_c=block_c, block_f=block_f,
+                        block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def quantize_int8(x, *, block_r: int = 256, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _q.quantize_int8(x, block_r=block_r, interpret=interpret)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are intentionally straightforward (quadratic attention, sequential
+scans) — they define the semantics the kernels must reproduce; tests
+sweep shapes/dtypes and assert allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (b, h, sq, dh); k/v: (b, kvh, sk, dh). GQA by head grouping."""
+    b, h, sq, dh = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, dh).astype(jnp.float32)
+    scale = dh ** -0.5 if scale is None else scale
+    s = jnp.einsum("bngqd,bnkd->bngqk", qg * scale, k.astype(jnp.float32))
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bnkd->bngqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, dh).astype(q.dtype)
+
+
+def selective_scan_ref(dt: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                       u: jax.Array, a: jax.Array,
+                       h0: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential S6 scan. dt/u: (b, s, di); bmat/cmat: (b, s, n); a: (di, n).
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * u_t * b_t;  y_t = h_t . c_t
+    Returns (y (b, s, di) fp32, h_final (b, di, n) fp32).
+    """
+    b, s, di = dt.shape
+    n = a.shape[-1]
+    dt = dt.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, u_t = inp
+        decay = jnp.exp(dt_t[..., None] * a)            # (b, di, n)
+        h = decay * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (dt.swapaxes(0, 1), bmat.swapaxes(0, 1), cmat.swapaxes(0, 1),
+          u.swapaxes(0, 1))
+    h_t, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_t
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV-6 WKV. r/k/v/w: (b, h, s, dh); u: (h, dh); decay w in (0,1).
+
+    y_t[i] = sum_j r_t[j] * (S[j,i] + u[j] k_t[j] v_t[i])
+    S      = diag(w_t) S + k_t v_t^T
+    Returns (y (b, h, s, dh) fp32, s_final (b, h, dh, dh) fp32).
+    """
+    b, h, s, dh = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    r, k, v = (x.astype(jnp.float32) for x in (r, k, v))
+    w = w.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                              # (b, h, dh)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhj,bhji->bhi", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(x.swapaxes(0, 2).swapaxes(1, 2) for x in (r, k, v, w))
+    # -> (s, b, h, dh)
+    s_t, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 2, 0, 3), s_t
+
+
+def gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped matmul: x (e, c, d) @ w (e, d, f) -> (e, c, f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def quantize_int8_ref(x):
+    """Per-row symmetric int8 quantization oracle. x: (rows, d)."""
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.abs(x32).max(axis=1), 1e-12)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale

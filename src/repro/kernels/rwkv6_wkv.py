@@ -1,0 +1,79 @@
+"""RWKV-6 WKV Pallas TPU kernel: linear attention with data-dependent
+per-channel decay and a (head_dim x head_dim) matrix state.
+
+TPU adaptation: the reference CUDA kernel (one thread per channel,
+state in registers, warp-level reuse) becomes a VMEM-resident state
+matrix updated by VPU-wide rank-1 outer products. Grid:
+(batch, heads, s/chunk) with the chunk dimension sequential; the state
+S (dh x dh) persists in VMEM scratch across chunks. head_dim=64 keeps
+S at 16 KiB fp32 — far under VMEM budget even with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sfin_ref, s_ref, *,
+            chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)                    # (dh,)
+
+    def step(t, s):
+        rt = r_ref[0, 0, t].astype(jnp.float32)         # (dh,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)
+        vt = v_ref[0, 0, t].astype(jnp.float32)
+        wt = w_ref[0, 0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                  # (dh, dh) rank-1
+        y_ref[0, 0, t] = rt @ (s + u[:, None] * kv)     # (dh,)
+        return wt[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, step, s_ref[...])
+    s_ref[...] = s
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        sfin_ref[0, 0] = s
+
+
+def rwkv6_wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, *, chunk: int = 64,
+              interpret: bool = False):
+    """r/k/v/w: (b, h, s, dh); u: (h, dh); w is the per-step decay in (0,1).
+
+    Returns (y (b, h, s, dh) fp32, s_final (b, h, dh, dh) fp32).
+    """
+    b, h, s, dh = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    grid = (b, h, n_chunks)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    seq_spec = pl.BlockSpec((1, 1, chunk, dh),
+                            lambda ib, ih, ic: (ib, ih, ic, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, dh), lambda ib, ih, ic: (ih, 0))],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, dh, dh), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,95 @@
+"""Selective-scan (Mamba S6) Pallas TPU kernel.
+
+TPU adaptation: the CUDA implementation parallelizes over threads within
+an SM and keeps per-thread state in registers; here the recurrence state
+h (block_d x n) lives in VMEM scratch and persists across the sequential
+seq-chunk grid dimension, while (batch, d_inner blocks) are parallel grid
+dimensions. Within a chunk the kernel steps time sequentially with a
+``fori_loop`` — each step is a (block_d, n) VPU-vectorized update, so the
+MXU-unfriendly recurrence stays wide on the VPU.
+
+Grid: (b, d_inner/block_d, s/chunk), last dim sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, b_ref, c_ref, u_ref, a_ref, y_ref, hfin_ref, h_ref, *,
+            chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                  # (bd, n)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)         # (bd,)
+        u_t = u_ref[0, t].astype(jnp.float32)           # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)           # (n,)
+        c_t = c_ref[0, t].astype(jnp.float32)           # (n,)
+        decay = jnp.exp(dt_t[:, None] * a)              # (bd, n)
+        h = decay * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = (h * c_t[None, :]).sum(axis=-1)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        hfin_ref[0] = h
+
+
+def selective_scan(dt: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                   u: jax.Array, a: jax.Array, *,
+                   block_d: int = 256, chunk: int = 64,
+                   interpret: bool = False):
+    """dt/u: (b, s, di); bmat/cmat: (b, s, n); a: (di, n).
+
+    Returns (y (b, s, di) fp32, h_final (b, di, n) fp32).
+    """
+    b, s, di = dt.shape
+    n = a.shape[-1]
+    block_d = min(block_d, di)
+    chunk = min(chunk, s)
+    assert di % block_d == 0 and s % chunk == 0
+    n_chunks = s // chunk
+    grid = (b, di // block_d, n_chunks)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda ib, id_, ic: (ib, ic, id_)),   # dt
+            pl.BlockSpec((1, chunk, n),
+                         lambda ib, id_, ic: (ib, ic, 0)),     # B
+            pl.BlockSpec((1, chunk, n),
+                         lambda ib, id_, ic: (ib, ic, 0)),     # C
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda ib, id_, ic: (ib, ic, id_)),   # u
+            pl.BlockSpec((block_d, n),
+                         lambda ib, id_, ic: (id_, 0)),        # A
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda ib, id_, ic: (ib, ic, id_)),   # y
+            pl.BlockSpec((1, block_d, n),
+                         lambda ib, id_, ic: (ib, id_, 0)),    # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), jnp.float32),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, bmat, cmat, u, a)

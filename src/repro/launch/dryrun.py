@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any other import (jax locks the device
+# count at first init). 512 placeholder host devices let jax.make_mesh
+# build the production meshes: single-pod (16,16)=256, multi-pod
+# (2,16,16)=512. Nothing is allocated: inputs/params are
+# ShapeDtypeStructs and we stop at .lower().compile().
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh)
+combination on the production mesh, then emit memory/cost/collective
+analysis for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 10x4x2 sweep
+"""
+import argparse
+import gc
+import json
+import pathlib
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import flops as F
+from repro.launch import specs as S
+from repro.launch import steps as ST
+from repro.launch.hlo_analysis import analyze_hlo, summarize
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh, mesh_chips)
+from repro.sharding.rules import MeshRules
+from repro.train import optimizer as O
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "benchmarks" / "results" / "dryrun"
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "peak_memory_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:                              # pragma: no cover
+        out["error"] = repr(e)
+    return out
+
+
+def _per_device_gib(mem: Dict[str, Any], chips: int) -> float:
+    """Per-device HBM estimate. argument/output sizes are per-device
+    (they follow the shardings); on the CPU host backend temp_size is the
+    host-wide total across all placeholder devices, so divide by chips.
+    """
+    return (mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0) / max(chips, 1)) / 2 ** 30
+
+
+def recommended_opts(cfg: ModelConfig, shape: InputShape) -> str:
+    """Per-(arch, shape) recommended levers from the §Perf hillclimbs."""
+    opts = []
+    if cfg.moe is not None:
+        opts.append("moegroup")
+        if cfg.moe.d_expert <= 1024:
+            opts.append("moedp")       # small experts: DP beats EP
+    if shape.kind == "decode":
+        opts.append("noweightfsdp")    # FSDP gathers dominate decode
+        # partial-softmax decode needs a data-shardable batch; at
+        # batch=1 (long_500k) it degenerates (measured regression)
+        if (cfg.attention == "full" and cfg.uses_attention
+                and shape.global_batch >= 16):
+            opts.append("decodeps")
+    return ",".join(opts)
+
+
+def _apply_opts(cfg: ModelConfig, rules: MeshRules, opts: str):
+    """Beyond-paper optimization levers (EXPERIMENTS.md §Perf):
+    --opt moegroup,seqshard,padheads=48 — or --opt auto."""
+    import dataclasses
+    for opt in filter(None, (opts or "").split(",")):
+        if opt == "moegroup":
+            cfg = dataclasses.replace(cfg, moe_group_dispatch=True)
+        elif opt == "moedp":
+            cfg = dataclasses.replace(cfg, moe_expert_parallel=False)
+        elif opt == "seqshard":
+            rules.act_rules["seq"] = ("model",)
+        elif opt == "bf16reduce":
+            rules.bf16_collectives = True
+        elif opt == "decodeps":
+            cfg = dataclasses.replace(cfg, decode_partial_softmax=True)
+        elif opt.startswith("accum="):
+            rules.accum_steps = int(opt.split("=")[1])
+        elif opt == "noweightfsdp":
+            # decode: keep params TP-sharded only — FSDP weight gathers
+            # dominate small-batch decode and the TP shard fits HBM
+            rules.param_rules["embed"] = None
+        elif opt.startswith("padheads="):
+            cfg = dataclasses.replace(cfg,
+                                      pad_heads_to=int(opt.split("=")[1]))
+        else:
+            raise ValueError(f"unknown --opt {opt!r}")
+    return cfg
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            save: bool = True, verbose: bool = True,
+            opts: str = "", tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind + tag,
+        "opts": opts,
+        "params_b": cfg.param_count() / 1e9,
+        "active_params_b": cfg.active_param_count() / 1e9,
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        if save:
+            _save(record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh_chips(mesh)
+    rules = MeshRules(mesh)
+    if opts == "auto":
+        opts = recommended_opts(cfg, shape)
+        record["opts"] = opts
+    cfg = _apply_opts(cfg, rules, opts)
+    param_dtype = jnp.bfloat16
+    t0 = time.time()
+    try:
+        abstract_params, axes, _ = ST.resolve_param_shardings(
+            cfg, rules, param_dtype)
+        if shape.kind == "train":
+            opt = O.make_optimizer(cfg.optimizer)
+            opt_sds = ST.opt_state_specs(opt, abstract_params, axes, rules)
+            step = ST.make_train_step(cfg, opt, rules=rules,
+                                      accum_steps=getattr(rules, "accum_steps", 1))
+            batch = S.batch_specs(cfg, shape, rules, with_labels=True)
+            with mesh:
+                lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                    abstract_params, opt_sds, batch)
+        elif shape.kind == "prefill":
+            step = ST.make_prefill_step(cfg, rules=rules)
+            batch = S.batch_specs(cfg, shape, rules, with_labels=False)
+            with mesh:
+                lowered = jax.jit(step).lower(abstract_params, batch)
+        else:  # decode
+            with_memory = cfg.encoder is not None
+            step = ST.make_decode_step(cfg, rules=rules,
+                                       with_memory=with_memory)
+            token = S._sds((shape.global_batch, 1), jnp.int32, rules,
+                           ("batch", "seq"))
+            cache = S.cache_specs(cfg, shape, rules)
+            index = jax.ShapeDtypeStruct((), jnp.int32)
+            args = [abstract_params, token, cache, index]
+            if with_memory:
+                args.append(S._sds(
+                    (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                    jnp.bfloat16, rules, ("batch", "frames", "embed")))
+            with mesh:
+                lowered = jax.jit(step, donate_argnums=(2,)).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = traceback.format_exc(limit=20)
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: {e}")
+        if save:
+            _save(record)
+        return record
+
+    cost = compiled.cost_analysis() or {}
+    hlo_report = analyze_hlo(compiled.as_text())
+    mem = _mem_analysis(compiled)
+    mem["per_device_gib_estimate"] = round(_per_device_gib(mem, chips), 3)
+    record.update({
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed",
+                                    "transcendentals", "optimal_seconds")},
+        "collective_bytes_per_device": hlo_report.collective_bytes,
+        "collectives_by_op": hlo_report.by_op(),
+        "loop_trip_counts": dict(
+            list(hlo_report.loop_trip_counts.items())[:12]),
+        "sharding_fallbacks": rules.fallbacks[:20],
+    })
+
+    # ---- roofline terms (single-pod table; see EXPERIMENTS.md) ----------
+    fwd = F.step_flops(cfg, shape)
+    total_flops = F.train_flops(cfg, shape) if shape.kind == "train" else fwd
+    opt_bpe = 8 if cfg.optimizer == "adamw" else 0
+    total_bytes = F.step_bytes(cfg, shape, 2, opt_bpe)
+    coll_bytes = hlo_report.collective_bytes      # per device
+    record["roofline"] = {
+        "analytic_flops": total_flops,
+        "analytic_hbm_bytes": total_bytes,
+        "model_flops": F.model_flops(cfg, shape),
+        "compute_s": total_flops / (chips * PEAK_FLOPS_BF16),
+        "memory_s": total_bytes / (chips * HBM_BW),
+        "collective_s": coll_bytes / ICI_BW,      # per-device bytes / link bw
+    }
+    terms = {k: record["roofline"][k]
+             for k in ("compute_s", "memory_s", "collective_s")}
+    record["roofline"]["dominant"] = max(terms, key=terms.get)
+    if verbose:
+        print(f"[OK] {arch} x {shape_name} x {mesh_kind} "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print(f"  mem/device: {mem.get('per_device_gib_estimate', 0):.2f} GiB"
+              f"  HLO flops(once): {cost.get('flops', 0):.3e}")
+        print(f"  roofline: compute {terms['compute_s']*1e3:.2f}ms "
+              f"memory {terms['memory_s']*1e3:.2f}ms "
+              f"collective {terms['collective_s']*1e3:.2f}ms "
+              f"-> {record['roofline']['dominant']}")
+        print("  " + summarize(hlo_report).replace("\n", "\n  "))
+    if save:
+        _save(record)
+    del compiled, lowered
+    gc.collect()
+    return record
+
+
+def _save(record: Dict[str, Any]):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(record, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all (arch, shape) on --mesh")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list: moegroup,seqshard,padheads=<n>")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (opt variants)")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in list_archs():
+            for shape in sorted(SHAPES):
+                out = RESULTS_DIR / f"{arch}__{shape}__{args.mesh}.json"
+                if args.skip_done and out.exists():
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        continue
+                run_one(arch, shape, args.mesh, opts=args.opt, tag=args.tag)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    run_one(args.arch, args.shape, args.mesh, opts=args.opt, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

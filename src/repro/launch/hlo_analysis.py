@@ -1,0 +1,172 @@
+"""Post-SPMD HLO text analysis: collective inventory with while-loop trip
+multipliers.
+
+``compiled.as_text()`` is the partitioned per-device module. Collectives
+inside ``lax.scan``-lowered while loops execute trip-count times but
+appear once in the text, so we:
+
+1. split the module into named computations,
+2. find every ``while`` op, recover the trip count from the largest
+   integer constant in its condition computation (scan conditions are
+   ``lt(iter, N)``),
+3. propagate multipliers from ENTRY through while bodies / calls /
+   conditionals,
+4. sum bytes of every collective op, scaled by its computation's
+   multiplier.
+
+Byte conventions (ring algorithms, per device): all-gather -> result
+bytes; all-reduce -> 2x result bytes; reduce-scatter -> result bytes x
+group size (input volume); all-to-all / collective-permute -> result
+bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-_]+)(?:\.clone)? \(.*\) -> ")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-_]+).*?body=%?([\w.\-_]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-_,% ]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every array shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveRecord:
+    op: str
+    bytes: int
+    mult: int
+    computation: str
+
+    @property
+    def total(self) -> int:
+        return self.bytes * self.mult
+
+
+@dataclass
+class HloReport:
+    collectives: List[CollectiveRecord] = field(default_factory=list)
+    loop_trip_counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> int:
+        return sum(c.total for c in self.collectives)
+
+    def by_op(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for c in self.collectives:
+            out[c.op] += c.total
+        return dict(out)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_HDR.match(line.rstrip())
+        if m and line and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+            continue
+        if cur is not None and stripped and stripped != "}":
+            comps[cur].append(stripped)
+        if stripped == "}":
+            cur = None
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(c) for line in cond_lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def analyze_hlo(hlo: str) -> HloReport:
+    comps = _split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:   # fall back: last computation is usually ENTRY
+        entry_name = list(comps)[-1]
+        entry = comps[entry_name]
+
+    report = HloReport()
+    mult: Dict[int, int] = {}        # id(lines) -> multiplier
+    visited: Dict[str, int] = {}
+
+    def visit(lines: List[str], m: int, name: str):
+        if name in visited and visited[name] >= m:
+            return
+        visited[name] = m
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                report.loop_trip_counts[body] = trips
+                if body in comps:
+                    visit(comps[body], m * trips, body)
+                continue
+            if " = " in line:
+                rhs = line.split(" = ", 1)[1]
+                for coll in COLLECTIVES:
+                    # opcode occurs right before '(' in the rhs; skip the
+                    # async -start half (count the -done результат once)
+                    if f"{coll}-start(" in rhs:
+                        break  # counted at the matching -done
+                    if f"{coll}(" in rhs or f"{coll}-done(" in rhs:
+                        shape_txt = rhs.split(coll)[0]
+                        nbytes = _shape_bytes(shape_txt)
+                        if coll == "all-reduce":
+                            nbytes *= 2
+                        report.collectives.append(
+                            CollectiveRecord(coll, nbytes, m, name))
+                        break
+            cm = _CALL_RE.search(line)
+            if cm and "while" not in line:
+                for callee in re.split(r"[ ,%]+", cm.group(1)):
+                    callee = callee.strip()
+                    if callee and callee in comps and callee != name:
+                        visit(comps[callee], m, callee)
+
+    visit(entry, 1, "__entry__")
+    return report
+
+
+def summarize(report: HloReport) -> str:
+    lines = [f"collective bytes/device: {report.collective_bytes:,}"]
+    for op, b in sorted(report.by_op().items(), key=lambda kv: -kv[1]):
+        lines.append(f"  {op:>22s}: {b:,}")
+    if report.loop_trip_counts:
+        trips = ", ".join(f"{k}x{v}" for k, v in
+                          list(report.loop_trip_counts.items())[:6])
+        lines.append(f"  loops: {trips}")
+    return "\n".join(lines)

@@ -1,0 +1,109 @@
+"""ShapeDtypeStruct stand-ins for every model input — the shannon/kernels
+pattern: weak-type-correct, shardable, no device allocation.
+
+``input_specs(cfg, shape, rules)`` returns the kwargs for the step
+function being lowered:
+
+- train:    {"batch": {tokens, labels, [frames|patches]}}
+- prefill:  {"batch": {tokens, [frames|patches]}}
+- decode:   {"token", "cache", "index", ["memory"]}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import attention, transformer
+from repro.sharding.rules import MeshRules
+
+
+def _sds(shape, dtype, rules: Optional[MeshRules], logical):
+    if rules is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = rules.act_spec(logical, shape)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(rules.mesh, spec))
+
+
+def text_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Text-token length such that total sequence == shape.seq_len."""
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        return shape.seq_len - cfg.frontend.num_tokens
+    return shape.seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape,
+                rules: Optional[MeshRules], with_labels: bool,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    b = shape.global_batch
+    s = text_len(cfg, shape)
+    batch = {"tokens": _sds((b, s), jnp.int32, rules, ("batch", "seq"))}
+    if with_labels:
+        batch["labels"] = _sds((b, s), jnp.int32, rules, ("batch", "seq"))
+    if cfg.frontend is not None:
+        if cfg.frontend.kind == "vision":
+            batch["patches"] = _sds((b, cfg.frontend.num_tokens, cfg.d_model),
+                                    dtype, rules, ("batch", "seq", "embed"))
+        else:  # audio: encoder frames
+            batch["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model),
+                                   dtype, rules, ("batch", "frames", "embed"))
+    elif cfg.encoder is not None:
+        batch["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model),
+                               dtype, rules, ("batch", "frames", "embed"))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# cache axes (mirror transformer.init_cache structure)
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_axes(cfg: ModelConfig, mixer: str):
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            return {"ckv": ("batch", "cache_seq", "kv_lora"),
+                    "k_rope": ("batch", "cache_seq", "head_dim")}
+        return {"k": attention.cache_spec_axes(),
+                "v": attention.cache_spec_axes()}
+    if mixer == "mamba":
+        return {"h": ("batch", "d_inner", "state"),
+                "conv": ("batch", "conv", "d_inner")}
+    if mixer == "rwkv":
+        return {"x_prev": ("batch", "embed"),
+                "s": ("batch", "heads", "head_dim", None)}
+    raise ValueError(mixer)
+
+
+def cache_axes(cfg: ModelConfig):
+    axes: Dict[str, Any] = {}
+    for i, (mixer, _) in enumerate(cfg.prefix_pattern):
+        axes[f"prefix{i}"] = _block_cache_axes(cfg, mixer)
+    stacked = {}
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        one = _block_cache_axes(cfg, mixer)
+        stacked[f"pos{i}"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, one,
+            is_leaf=lambda x: isinstance(x, tuple))
+    axes["blocks"] = stacked
+    return axes
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape,
+                rules: Optional[MeshRules], dtype=jnp.bfloat16):
+    abstract = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch,
+                                       shape.seq_len, dtype))
+    if rules is None:
+        return abstract
+    ax = cache_axes(cfg)
+    return jax.tree.map(
+        lambda sds, a: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=NamedSharding(rules.mesh,
+                                   rules.act_spec(a, sds.shape))),
+        abstract, ax,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,53 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --reduced \
+      --steps 100 --batch 8 --seq 128
+
+Full-size configs on real hardware would use the same entry point with
+--mesh (the dry-run proves those lower; this CPU container trains only
+--reduced variants).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.data.synthetic import make_lm_batches
+from repro.launch.mesh import make_local_mesh
+from repro.sharding.rules import MeshRules
+from repro.train.trainer import TrainJob, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced smoke variant (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics-dir", default=None)
+    ap.add_argument("--mesh", action="store_true",
+                    help="use a local (1,1) mesh with sharding rules")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    rules = MeshRules(make_local_mesh()) if args.mesh else None
+    job = TrainJob(cfg=cfg, lr=args.lr, steps=args.steps, seed=args.seed,
+                   ckpt_dir=args.ckpt_dir, metrics_dir=args.metrics_dir,
+                   rules=rules, log_every=max(1, args.steps // 20))
+    batches = make_lm_batches(cfg.vocab, args.batch, args.seq,
+                              args.steps + 1, seed=args.seed)
+    res = train(job, batches)
+    print(f"{args.arch}: final metrics {res['metrics']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Selective SSM (S6 / Mamba-1) mixer, used by Jamba's mamba layers.
+
+Training/prefill uses a *chunked* associative scan: the sequence is cut
+into chunks of 128; the (b, chunk, d_inner, d_state) decay/drive tensors
+are materialized only per-chunk inside the scan body, the diagonal linear
+recurrence ``h_t = a_t * h_{t-1} + bx_t`` is solved with
+``lax.associative_scan``, outputs are contracted with C inside the body,
+and only the chunk-final state is carried. Live memory is
+O(b * chunk * d_inner * d_state), never O(seq * ...).
+
+Decode is the O(1) recurrent step on a cached state + conv tail.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import Spec
+from repro.sharding import constrain
+from repro.sharding.rules import reduce_dtype
+
+CHUNK = 128
+
+
+def mamba_spec(cfg: ModelConfig):
+    mb = cfg.mamba
+    d = cfg.d_model
+    di = mb.d_inner(d)
+    return {
+        "w_in": Spec((d, 2 * di), ("embed", "d_inner")),
+        "conv_w": Spec((mb.d_conv, di), ("conv", "d_inner"), scale=0.5),
+        "conv_b": Spec((di,), ("d_inner",), init="zeros"),
+        "w_x": Spec((di, mb.dt_rank + 2 * mb.d_state), ("d_inner", None)),
+        "w_dt": Spec((mb.dt_rank, di), ("dt_rank", "d_inner")),
+        "b_dt": Spec((di,), ("d_inner",), init="ones", scale=-4.6,
+                     dtype=jnp.float32),   # softplus(-4.6) ~ 0.01
+        "a_log": Spec((di, mb.d_state), ("d_inner", "state"), init="ones",
+                      scale=0.0, dtype=jnp.float32),
+        "d_skip": Spec((di,), ("d_inner",), init="ones", dtype=jnp.float32),
+        "w_out": Spec((di, d), ("d_inner", "embed")),
+    }
+
+
+def _conv1d(x, w, b):
+    """Causal depthwise conv. x: (b, s, di); w: (k, di)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def _dt_b_c(cfg, params, u):
+    """u: (b, s, di) post-conv. Returns dt (b,s,di) fp32, B/C (b,s,N) fp32."""
+    mb = cfg.mamba
+    proj = jnp.einsum("bsd,dr->bsr", u, params["w_x"])
+    dt_r, bmat, cmat = jnp.split(
+        proj, [mb.dt_rank, mb.dt_rank + mb.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, params["w_dt"]).astype(jnp.float32)
+        + params["b_dt"])
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def ssm_scan(dt, bmat, cmat, u, a_mat, h0) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan (also the oracle for the Pallas kernel).
+
+    dt: (b,s,di) fp32; bmat/cmat: (b,s,N); u: (b,s,di); a_mat: (di,N) (<0);
+    h0: (b,di,N). Returns (y (b,s,di) fp32, h_final).
+    """
+    b, s, di = dt.shape
+    n = a_mat.shape[-1]
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    def split(x, ax):
+        out = x.reshape((b, n_chunks, chunk) + x.shape[2:]).swapaxes(0, 1)
+        # keep d_inner model-sharded through the reshape/transpose —
+        # without this XLA loses the sharding and replicates (§Perf)
+        return constrain(out, (None, "batch", None) + ax)
+
+    dt_c = split(dt, ("d_inner",))
+    b_c = split(bmat, ("state",))
+    c_c = split(cmat, ("state",))
+    u_c = split(u.astype(jnp.float32), ("d_inner",))
+
+    def body(h, inp):
+        dtc, bc, cc, uc = inp                       # (b, chunk, ...)
+        a = jnp.exp(dtc[..., None] * a_mat)         # (b,chunk,di,N)
+        bx = (dtc * uc)[..., None] * bc[:, :, None, :]
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        aa, bb = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h_all = bb + aa * h[:, None]                # absorb carry
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cc)
+        y = constrain(y, ("batch", None, "d_inner"))
+        return constrain(h_all[:, -1], ("batch", "d_inner", "state")), y
+
+    h_t, y_c = jax.lax.scan(body, h0, (dt_c, b_c, c_c, u_c))
+    y = y_c.swapaxes(0, 1).reshape(b, s, di)
+    return y, h_t
+
+
+def mamba_mixer(cfg: ModelConfig, params, x) -> jax.Array:
+    """Training / prefill. x: (b, s, d) -> (b, s, d)."""
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xz = constrain(xz, ("batch", "seq", "d_inner"))
+    u, z = jnp.split(xz, 2, axis=-1)                   # (b,s,di) each
+    u = jax.nn.silu(_conv1d(u, params["conv_w"], params["conv_b"]))
+    u = constrain(u, ("batch", "seq", "d_inner"))
+    dt, bmat, cmat = _dt_b_c(cfg, params, u)
+    dt = constrain(dt, ("batch", "seq", "d_inner"))
+    a_mat = -jnp.exp(params["a_log"])
+    h0 = jnp.zeros((x.shape[0], a_mat.shape[0], a_mat.shape[1]), jnp.float32)
+    y, _ = ssm_scan(dt, bmat, cmat, u, a_mat, h0)
+    y = y + params["d_skip"] * u.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, params["w_out"],
+                      preferred_element_type=reduce_dtype(y.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    mb = cfg.mamba
+    di = mb.d_inner(cfg.d_model)
+    return {
+        "h": jnp.zeros((batch, di, mb.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mb.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, params, x, cache
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (b, 1, d). O(1) state update."""
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+    u = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, params["conv_w"])
+        + params["conv_b"])[:, None, :]
+    dt, bmat, cmat = _dt_b_c(cfg, params, u)
+    a_mat = -jnp.exp(params["a_log"])
+    a = jnp.exp(dt[:, 0, :, None] * a_mat)             # (b,di,N)
+    bx = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+        * bmat[:, 0, None, :]
+    h = a * cache["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None, :]
+    y = y + params["d_skip"] * u.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"])
+    return out, {"h": h, "conv": window[:, 1:].astype(cache["conv"].dtype)}

@@ -1,0 +1,104 @@
+"""Minimal spec-based parameter system.
+
+Each layer module defines a *spec tree*: nested dicts whose leaves are
+:class:`Spec` (shape + logical axes + initializer). From one spec tree we
+derive three views:
+
+- ``init_tree``      -> concrete ``jnp.ndarray`` params (smoke tests, training)
+- ``abstract_tree``  -> ``jax.ShapeDtypeStruct`` params (AOT dry-run: a 398B
+                        model is never materialized)
+- ``axes_tree``      -> logical-axis tuples, resolved to ``NamedSharding`` by
+                        ``repro.sharding.rules``
+
+``stack(spec, n, axis_name)`` prepends a scan dimension so layer stacks are
+stored stacked and iterated with ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled_normal
+    scale: float = 1.0            # stddev multiplier (normal) or value
+    dtype: Any = None             # override param dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec rank mismatch: {self.shape} vs {self.axes}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _map_specs(fn: Callable[[Tuple[str, ...], Spec], Any], tree: PyTree,
+               path: Tuple[str, ...] = ()) -> PyTree:
+    if is_spec(tree):
+        return fn(path, tree)
+    return {k: _map_specs(fn, v, path + (k,)) for k, v in tree.items()}
+
+
+def _key_for(root: jax.Array, path: Tuple[str, ...]) -> jax.Array:
+    # deterministic per-path key: fold in a stable hash of the path
+    h = int.from_bytes(
+        hashlib.sha256("/".join(path).encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+def init_tree(spec: PyTree, key: jax.Array, param_dtype=jnp.float32) -> PyTree:
+    def leaf(path, s: Spec):
+        dtype = s.dtype or param_dtype
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.full(s.shape, s.scale, dtype)
+        fan_in = s.shape[0] if len(s.shape) == 1 else int(
+            np.prod(s.shape[:-1]))
+        std = s.scale / max(1.0, fan_in) ** 0.5
+        k = _key_for(key, path)
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dtype)
+    return _map_specs(leaf, spec)
+
+
+def abstract_tree(spec: PyTree, param_dtype=jnp.float32) -> PyTree:
+    def leaf(path, s: Spec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype)
+    return _map_specs(leaf, spec)
+
+
+def axes_tree(spec: PyTree) -> PyTree:
+    return _map_specs(lambda _, s: s.axes, spec)
+
+
+def stack(spec: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    """Prepend a scan dimension of size ``n`` to every leaf."""
+    def leaf(_, s: Spec):
+        return replace(s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes)
+    return _map_specs(leaf, spec)
+
+
+def param_bytes(spec: PyTree, bytes_per_el: int = 2) -> int:
+    total = 0
+
+    def leaf(_, s: Spec):
+        nonlocal total
+        total += int(np.prod(s.shape)) * bytes_per_el
+    _map_specs(leaf, spec)
+    return total
+
+
+def tree_slice(tree: PyTree, i) -> PyTree:
+    """Index the leading (scan) dim of every leaf — used inside lax.scan."""
+    return jax.tree.map(lambda x: x[i], tree)

@@ -1,0 +1,150 @@
+"""RWKV-6 "Finch" time-mix: linear attention with data-dependent decay.
+
+Faithful points: per-channel decay produced by a LoRA on the token-shifted
+input (the headline RWKV-6 feature), bonus ``u`` on the current token,
+per-head matrix state S of shape (head_dim, head_dim), group-norm on the
+read-out, silu output gate. Token-shift uses learned static mix
+coefficients (the double-dynamic-mix of the full model is simplified; see
+DESIGN.md).
+
+The sequential recurrence here is the oracle; the Pallas kernel
+(``repro/kernels/rwkv6_wkv.py``) computes the same function chunked.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import Spec
+from repro.sharding.rules import reduce_dtype
+
+
+def rwkv_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.rwkv
+    h = d // r.head_dim
+    dh = r.head_dim
+    spec = {
+        "w_r": Spec((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_k": Spec((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_v": Spec((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_g": Spec((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_o": Spec((h, dh, d), ("heads", "head_dim", "embed")),
+        "decay_base": Spec((h, dh), ("heads", "head_dim"), init="ones",
+                           scale=1.0, dtype=jnp.float32),
+        "decay_a": Spec((d, r.decay_lora), ("embed", None)),
+        "decay_b": Spec((r.decay_lora, h, dh), (None, "heads", "head_dim")),
+        "bonus": Spec((h, dh), ("heads", "head_dim"), init="ones",
+                      scale=0.5, dtype=jnp.float32),
+        "gn_scale": Spec((h, dh), ("heads", "head_dim"), init="ones",
+                         dtype=jnp.float32),
+        "gn_bias": Spec((h, dh), ("heads", "head_dim"), init="zeros",
+                        dtype=jnp.float32),
+    }
+    for name in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"):
+        spec[name] = Spec((d,), ("embed",), init="ones", scale=0.5,
+                          dtype=jnp.float32)
+    return spec
+
+
+def wkv_scan(r, k, v, w, u, s0) -> Tuple[jax.Array, jax.Array]:
+    """The RWKV-6 recurrence (oracle for the Pallas kernel).
+
+    r,k,v,w: (b, s, h, dh) fp32 (w = per-step decay in (0,1));
+    u: (h, dh); s0: (b, h, dh, dh) with S[j, i] indexed [key_dim, val_dim].
+    Returns (y (b,s,h,dh), s_final).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                          # (b,h,dh)
+        kv = kt[..., :, None] * vt[..., None, :]      # (b,h,dh,dh)
+        y = jnp.einsum("bhj,bhji->bhi", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = jax.tree.map(lambda x: x.swapaxes(0, 1), (r, k, v, w))
+    s_t, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_t
+
+
+def _project(x, wmat):
+    return jnp.einsum("bsd,dhk->bshk", x, wmat)
+
+
+def _mix(x, x_prev, mu):
+    return x + mu.astype(x.dtype) * (x_prev - x)
+
+
+def _decay(cfg, params, mix_w):
+    lora = jnp.einsum("bsr,rhk->bshk",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", mix_w,
+                                          params["decay_a"])),
+                      params["decay_b"]).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(params["decay_base"] + lora))
+
+
+def _groupnorm(params, y, eps=1e-5):
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    return (y - mean) * jax.lax.rsqrt(var + eps) * params["gn_scale"] \
+        + params["gn_bias"]
+
+
+def rwkv_mixer(cfg: ModelConfig, params, x) -> jax.Array:
+    """Training / prefill. x: (b, s, d)."""
+    b, s, d = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r = _project(_mix(x, x_prev, params["mu_r"]), params["w_r"])
+    k = _project(_mix(x, x_prev, params["mu_k"]), params["w_k"])
+    v = _project(_mix(x, x_prev, params["mu_v"]), params["w_v"])
+    g = jax.nn.silu(_project(_mix(x, x_prev, params["mu_g"]), params["w_g"]))
+    w = _decay(cfg, params, _mix(x, x_prev, params["mu_w"]))
+
+    h = r.shape[2]
+    s0 = jnp.zeros((b, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim), jnp.float32)
+    y, _ = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), w, params["bonus"], s0)
+    y = _groupnorm(params, y).astype(x.dtype) * g
+    return jnp.einsum("bshk,hkd->bsd", y, params["w_o"],
+                      preferred_element_type=reduce_dtype(y.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    h = d // cfg.rwkv.head_dim
+    return {
+        "x_prev": jnp.zeros((batch, d), dtype),
+        "s": jnp.zeros((batch, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                       jnp.float32),
+    }
+
+
+def rwkv_decode(cfg: ModelConfig, params, x, cache
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (b, 1, d). O(1) state update."""
+    x_prev = cache["x_prev"].astype(x.dtype)[:, None, :]
+    r = _project(_mix(x, x_prev, params["mu_r"]), params["w_r"])
+    k = _project(_mix(x, x_prev, params["mu_k"]), params["w_k"])
+    v = _project(_mix(x, x_prev, params["mu_v"]), params["w_v"])
+    g = jax.nn.silu(_project(_mix(x, x_prev, params["mu_g"]), params["w_g"]))
+    w = _decay(cfg, params, _mix(x, x_prev, params["mu_w"]))
+
+    rt = r[:, 0].astype(jnp.float32)
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    wt = w[:, 0]
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhj,bhji->bhi", rt,
+                   cache["s"] + params["bonus"][..., :, None] * kv)
+    s = wt[..., :, None] * cache["s"] + kv
+    y = _groupnorm(params, y)[:, None].astype(x.dtype) * g
+    out = jnp.einsum("bshk,hkd->bsd", y, params["w_o"])
+    return out, {"x_prev": x[:, 0].astype(cache["x_prev"].dtype), "s": s}

@@ -1,0 +1,389 @@
+"""Model assembly: block -> stack (scan over repeats) -> LM / enc-dec.
+
+One code path serves all 10 assigned architectures:
+
+- dense / moe / ssm / hybrid decoder-only LMs (glm4, qwen3, granite,
+  deepseek, minicpm3, h2o-danube, rwkv6, jamba),
+- encoder-decoder with cross-attention + audio frontend stub (whisper),
+- VLM with vision-patch prefix + text tokens (internvl2).
+
+Layer stacks are stored *stacked* (leading scan dim) and iterated with
+``jax.lax.scan`` so HLO size is independent of depth; each block is
+optionally wrapped in ``jax.checkpoint`` per ``cfg.remat_policy``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, mamba, mla, moe, params as P
+from repro.models import rwkv
+from repro.sharding import constrain
+
+Params = Any
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def _is_ln(cfg: ModelConfig) -> bool:
+    """Whisper-family uses layernorm + biased (non-gated) MLP."""
+    return cfg.encoder is not None
+
+
+def _norm_spec(cfg):
+    return layers.layernorm_spec(cfg.d_model) if _is_ln(cfg) \
+        else layers.rmsnorm_spec(cfg.d_model)
+
+
+def _norm(cfg, p, x):
+    fn = layers.layernorm if _is_ln(cfg) else layers.rmsnorm
+    return fn(p, x, cfg.norm_eps)
+
+
+def block_spec(cfg: ModelConfig, mixer: str, ffn: str, cross: bool = False):
+    spec: Dict[str, Any] = {"norm1": _norm_spec(cfg)}
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            spec["mixer"] = mla.mla_spec(cfg)
+        else:
+            spec["mixer"] = attention.attention_spec(cfg)
+    elif mixer == "mamba":
+        spec["mixer"] = mamba.mamba_spec(cfg)
+    elif mixer == "rwkv":
+        spec["mixer"] = rwkv.rwkv_spec(cfg)
+    if cross:
+        spec["norm_x"] = _norm_spec(cfg)
+        spec["cross"] = attention.attention_spec(cfg, cross=True)
+    spec["norm2"] = _norm_spec(cfg)
+    if ffn == "moe":
+        spec["ffn"] = moe.moe_spec(cfg)
+    elif _is_ln(cfg):
+        spec["ffn"] = layers.mlp_spec(cfg.d_model, cfg.d_ff)
+    else:
+        spec["ffn"] = layers.gated_mlp_spec(cfg.d_model, cfg.d_ff)
+    return spec
+
+
+def model_spec(cfg: ModelConfig):
+    cross = cfg.encoder is not None
+    spec: Dict[str, Any] = {
+        "embed": layers.embedding_spec(cfg.vocab, cfg.d_model),
+        "final_norm": _norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = layers.unembed_spec(cfg.vocab, cfg.d_model)
+    for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
+        spec[f"prefix{i}"] = block_spec(cfg, mixer, ffn, cross)
+    stacked = {}
+    for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+        stacked[f"pos{i}"] = P.stack(block_spec(cfg, mixer, ffn, cross),
+                                     cfg.n_repeats)
+    spec["blocks"] = stacked
+    if cfg.encoder is not None:
+        enc_block = {
+            "norm1": _norm_spec(cfg),
+            "mixer": attention.attention_spec(cfg),
+            "norm2": _norm_spec(cfg),
+            "ffn": layers.mlp_spec(cfg.d_model, cfg.d_ff),
+        }
+        spec["encoder"] = {
+            "blocks": P.stack(enc_block, cfg.encoder.n_layers),
+            "final_norm": _norm_spec(cfg),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, mixer: str, ffn: str, p, x,
+                 memory=None, positions=None) -> Tuple[jax.Array, Dict]:
+    aux = {}
+    h = _norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            h = mla.mla_self_attention(cfg, p["mixer"], h,
+                                       positions=positions)
+        else:
+            h = attention.self_attention(cfg, p["mixer"], h,
+                                         positions=positions)
+    elif mixer == "mamba":
+        h = mamba.mamba_mixer(cfg, p["mixer"], h)
+    elif mixer == "rwkv":
+        h = rwkv.rwkv_mixer(cfg, p["mixer"], h)
+    x = x + h
+    if memory is not None and "cross" in p:
+        x = x + attention.cross_attention(cfg, p["cross"],
+                                          _norm(cfg, p["norm_x"], x), memory)
+    h = _norm(cfg, p["norm2"], x)
+    if ffn == "moe":
+        h, aux = moe.moe_ffn(cfg, p["ffn"], h, cfg.act)
+    elif _is_ln(cfg):
+        h = layers.mlp(p["ffn"], h, cfg.act)
+    else:
+        h = layers.gated_mlp(p["ffn"], h, cfg.act)
+    x = x + h
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "minimal":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _stack_forward(cfg: ModelConfig, params, x, memory=None, positions=None
+                   ) -> Tuple[jax.Array, Dict]:
+    """Prefix blocks (unrolled) + pattern blocks (lax.scan over repeats)."""
+    aux_losses = {"load_balance": jnp.zeros((), jnp.float32),
+                  "router_z": jnp.zeros((), jnp.float32)}
+
+    def add_aux(aux):
+        for k in aux_losses:
+            if k in aux:
+                aux_losses[k] = aux_losses[k] + aux[k]
+
+    for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
+        x, aux = _apply_block(cfg, mixer, ffn, params[f"prefix{i}"], x,
+                              memory, positions)
+        add_aux(aux)
+
+    def unit(x, unit_params):
+        aux_acc = {"load_balance": jnp.zeros((), jnp.float32),
+                   "router_z": jnp.zeros((), jnp.float32)}
+        for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+            x, aux = _apply_block(cfg, mixer, ffn, unit_params[f"pos{i}"], x,
+                                  memory, positions)
+            for k in aux_acc:
+                if k in aux:
+                    aux_acc[k] = aux_acc[k] + aux[k]
+        return x, aux_acc
+
+    unit = _maybe_remat(cfg, unit)
+
+    def body(x, unit_params):
+        return unit(x, unit_params)
+
+    x, aux_stacked = jax.lax.scan(body, x, params["blocks"])
+    for k in aux_losses:
+        aux_losses[k] = aux_losses[k] + aux_stacked[k].sum()
+    n_moe = sum(f == "moe" for _, f in
+                cfg.prefix_pattern + cfg.block_pattern * cfg.n_repeats)
+    if n_moe:
+        for k in aux_losses:
+            aux_losses[k] = aux_losses[k] / n_moe
+    return x, aux_losses
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], -1)[:, :d]
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (b, n_frames, d) precomputed embeddings (frontend stub)."""
+    x = frames + _sinusoidal(frames.shape[1],
+                             cfg.d_model).astype(frames.dtype)[None]
+
+    def body(x, p):
+        h = _norm(cfg, p["norm1"], x)
+        h = attention.self_attention(cfg, p["mixer"], h, causal=False)
+        x = x + h
+        h = layers.mlp(p["ffn"], _norm(cfg, p["norm2"], x), cfg.act)
+        return x + h, ()
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return _norm(cfg, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """Training / prefill forward. batch keys:
+
+    - "tokens": (b, s_text) int32 — always present
+    - "frames": (b, n_frames, d) — audio stub (whisper)
+    - "patches": (b, n_patch, d) — vision stub (internvl); the full
+      sequence is [patches ; embed(tokens)] with total length s.
+    Returns (logits (b, s, vocab), aux).
+    """
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens, dtype)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    if _is_ln(cfg):   # whisper decoder: learned-free sinusoidal positions
+        x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(dtype)[None]
+
+    memory = None
+    if cfg.encoder is not None:
+        memory = encode(cfg, params, batch["frames"].astype(dtype))
+
+    x, aux = _stack_forward(cfg, params, x, memory, positions)
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    else:
+        logits = layers.unembed(params["lm_head"], x)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(cfg, params, batch, dtype)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        # vision prefix carries no next-token loss
+        npatch = cfg.frontend.num_tokens
+        pad = jnp.zeros(labels.shape[:1] + (npatch,), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        pm = jnp.concatenate(
+            [jnp.zeros_like(pad, jnp.float32),
+             jnp.ones(batch["labels"].shape, jnp.float32)], axis=1)
+        mask = pm if mask is None else mask * pm
+    loss, metrics = layers.softmax_xent(logits, labels, mask)
+    total = loss
+    if cfg.moe is not None:
+        total = (total
+                 + cfg.moe.router_aux_weight * aux["load_balance"]
+                 + cfg.moe.router_z_weight * aux["router_z"])
+        metrics["load_balance"] = aux["load_balance"]
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + single-token step
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ModelConfig, mixer: str, batch: int, max_seq: int,
+                 dtype=jnp.bfloat16):
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            return mla.init_mla_cache(cfg, batch, max_seq, dtype)
+        return attention.init_kv_cache(cfg, batch, max_seq, dtype)
+    if mixer == "mamba":
+        return mamba.init_mamba_cache(cfg, batch, dtype)
+    if mixer == "rwkv":
+        return rwkv.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    cache: Dict[str, Any] = {}
+    for i, (mixer, _) in enumerate(cfg.prefix_pattern):
+        cache[f"prefix{i}"] = _block_cache(cfg, mixer, batch, max_seq, dtype)
+    stacked = {}
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        one = _block_cache(cfg, mixer, batch, max_seq, dtype)
+        stacked[f"pos{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_repeats,) + x.shape).copy(), one)
+    cache["blocks"] = stacked
+    return cache
+
+
+def _decode_block(cfg, mixer, ffn, p, x, cache, index, memory):
+    from repro.sharding import current_rules
+    aux: Dict = {}
+    h = _norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            h, cache = mla.mla_decode_attention(cfg, p["mixer"], h, cache,
+                                                index)
+        elif (cfg.decode_partial_softmax and cfg.attention == "full"
+              and current_rules() is not None):
+            from repro.models.decode_sharded import sharded_decode_attention
+            h, cache = sharded_decode_attention(cfg, p["mixer"], h, cache,
+                                                index, current_rules())
+        else:
+            h, cache = attention.decode_attention(cfg, p["mixer"], h, cache,
+                                                  index)
+    elif mixer == "mamba":
+        h, cache = mamba.mamba_decode(cfg, p["mixer"], h, cache)
+    elif mixer == "rwkv":
+        h, cache = rwkv.rwkv_decode(cfg, p["mixer"], h, cache)
+    x = x + h
+    if memory is not None and "cross" in p:
+        x = x + attention.cross_attention(cfg, p["cross"],
+                                          _norm(cfg, p["norm_x"], x), memory)
+    h = _norm(cfg, p["norm2"], x)
+    if ffn == "moe":
+        h, aux = moe.moe_ffn(cfg, p["ffn"], h, cfg.act)
+    elif _is_ln(cfg):
+        h = layers.mlp(p["ffn"], h, cfg.act)
+    else:
+        h = layers.gated_mlp(p["ffn"], h, cfg.act)
+    return x + h, cache
+
+
+def decode_step(cfg: ModelConfig, params, token: jax.Array, cache,
+                index, memory: Optional[jax.Array] = None,
+                dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
+    """token: (b, 1) int32; index: scalar int32 tokens-so-far.
+
+    Returns (logits (b, 1, vocab), new_cache).
+    """
+    index = jnp.asarray(index, jnp.int32)
+    x = layers.embed(params["embed"], token, dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    if _is_ln(cfg):
+        # scalar sinusoidal position for the traced index
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+        angle = index.astype(jnp.float32) / jnp.power(10_000.0, dim / d)
+        pos_emb = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)])[:d]
+        x = x + pos_emb.astype(dtype)[None, None]
+
+    new_cache: Dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(cfg.prefix_pattern):
+        x, c = _decode_block(cfg, mixer, ffn, params[f"prefix{i}"], x,
+                             cache[f"prefix{i}"], index, memory)
+        new_cache[f"prefix{i}"] = c
+
+    def body(x, scan_in):
+        unit_params, unit_cache = scan_in
+        out_cache = {}
+        for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+            x, c = _decode_block(cfg, mixer, ffn, unit_params[f"pos{i}"], x,
+                                 unit_cache[f"pos{i}"], index, memory)
+            out_cache[f"pos{i}"] = c
+        return x, out_cache
+
+    x, blocks_cache = jax.lax.scan(body, x, (params["blocks"],
+                                             cache["blocks"]))
+    new_cache["blocks"] = blocks_cache
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    else:
+        logits = layers.unembed(params["lm_head"], x)
+    return logits, new_cache

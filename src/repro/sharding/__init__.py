@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    MeshRules, constrain, current_rules, use_rules,
+    TRAIN_RULES, DECODE_RULES, logical_to_spec,
+)

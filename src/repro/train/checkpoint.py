@@ -1,0 +1,76 @@
+"""Checkpointing: param/optimizer pytrees -> .npz + JSON tree manifest.
+
+Pure-python (no orbax offline): leaves are saved flat with path-derived
+keys; restore rebuilds the exact tree. Sharded arrays are gathered
+implicitly by np.asarray (process-local; fine for CPU and single-host).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, step: int, params, opt_state=None, extra=None) -> None:
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    blobs: Dict[str, np.ndarray] = {}
+    manifest: Dict[str, Any] = {"step": step, "extra": extra or {}}
+    for prefix, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        flat = _flatten(tree)
+        manifest[prefix] = jax.tree.map(lambda _: 0, tree)  # structure only
+        for k, v in flat.items():
+            arr = np.asarray(v)
+            if arr.dtype == jax.numpy.bfloat16:
+                blobs[f"{prefix}/{k}|bf16"] = arr.astype(np.float32)
+            else:
+                blobs[f"{prefix}/{k}"] = arr
+    np.savez(p / f"step_{step:08d}.npz", **blobs)
+    (p / "manifest.json").write_text(json.dumps(
+        {"step": step, "extra": extra or {}}))
+
+
+def latest_step(path: str) -> int:
+    p = pathlib.Path(path)
+    ckpts = sorted(p.glob("step_*.npz"))
+    if not ckpts:
+        return -1
+    return int(ckpts[-1].stem.split("_")[1])
+
+
+def restore(path: str, step: int, params_like, opt_like=None
+            ) -> Tuple[Any, Any]:
+    """Restore into the structure of ``params_like`` / ``opt_like``."""
+    p = pathlib.Path(path)
+    data = np.load(p / f"step_{step:08d}.npz")
+    loaded = {}
+    for k in data.files:
+        if k.endswith("|bf16"):
+            loaded[k[:-5]] = jax.numpy.asarray(data[k], jax.numpy.bfloat16)
+        else:
+            loaded[k] = data[k]
+
+    def rebuild(prefix, like):
+        if like is None:
+            return None
+        flat = _flatten(like)
+        out = {k: loaded[f"{prefix}/{k}"] for k in flat}
+        leaves = [out[k] for k in flat]
+        treedef = jax.tree.structure(like)
+        return jax.tree.unflatten(treedef, leaves)
+
+    return rebuild("params", params_like), rebuild("opt", opt_like)

@@ -1,0 +1,175 @@
+"""Optimizers over param pytrees, axes-aware for sharded dry-runs.
+
+Each optimizer provides ``init(params) -> state`` and
+``update(grads, state, params, lr) -> (new_params, new_state)``; plus
+``state_axes(axes_tree) -> axes for state`` so the dry-run can resolve
+NamedShardings for optimizer slots (Adafactor's factored slots drop a
+dim, so their axes are derived from the param axes).
+
+AdamW for <=20B archs; Adafactor (factored second moment, no first
+moment) for jamba-398B / internvl-76B where Adam slots would not fit
+16 GB/chip (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _tmap(fn, *trees):
+    return jax.tree.map(fn, *trees)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array],
+                     Tuple[PyTree, PyTree]]
+    state_axes: Callable[[PyTree], PyTree]
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mom": _tmap(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        mom = _tmap(lambda m, g: momentum * m + g.astype(m.dtype),
+                    state["mom"], grads)
+        def upd(p, m):
+            step = m + weight_decay * p.astype(m.dtype)
+            return (p.astype(jnp.float32) - lr * step.astype(jnp.float32)
+                    ).astype(p.dtype)
+        return _tmap(upd, params, mom), {"mom": mom}
+
+    def state_axes(axes):
+        return {"mom": axes}
+
+    return Optimizer("sgdm", init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+
+        def upd(p, m_, v_):
+            mh = m_ / (1 - b1 ** c)
+            vh = v_ / (1 - b2 ** c)
+            step = mh / (jnp.sqrt(vh) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = _tmap(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}
+
+    def state_axes(axes):
+        return {"m": axes, "v": axes, "count": ()}
+
+    return Optimizer("adamw", init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, beta1=0)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def slot(p):
+            if _factored(p):
+                return {
+                    "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": _tmap(slot, params,
+                               ), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, slot):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                v_row = beta2 * slot["v_row"] + (1 - beta2) * g2.mean(-1)
+                v_col = beta2 * slot["v_col"] + (1 - beta2) * g2.mean(-2)
+                row_mean = v_row.mean(-1, keepdims=True)
+                r = (v_row / jnp.maximum(row_mean, eps))[..., None]
+                u = g * jax.lax.rsqrt(jnp.maximum(r, eps)) \
+                    * jax.lax.rsqrt(jnp.maximum(v_col, eps))[..., None, :]
+                new_slot = {"v_row": v_row, "v_col": v_col}
+            else:
+                v = beta2 * slot["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_slot = {"v": v}
+            norm = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, norm / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_slot
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state["slots"])
+        out = [upd(p, g, s) for p, g, s in zip(flat, gflat, sflat)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_slots = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_params, {"slots": new_slots, "count": count}
+
+    def state_axes(axes):
+        def slot_axes(ax):
+            if len(ax) >= 2:
+                return {"v_row": ax[:-1], "v_col": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+        return {"slots": jax.tree.map(
+            slot_axes, axes,
+            is_leaf=lambda x: isinstance(x, tuple)), "count": ()}
+
+    return Optimizer("adafactor", init, update, state_axes)
+
+
+def make_optimizer(name: str) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name]()
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

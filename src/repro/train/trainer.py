@@ -1,0 +1,74 @@
+"""Training loop: any registered architecture, any mesh (or none),
+checkpointing + metrics. Used by examples/quickstart.py and the
+end-to-end driver (examples/train_lm.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as ST
+from repro.models import params as PRM, transformer as T
+from repro.sharding.rules import MeshRules
+from repro.train import checkpoint as CKPT
+from repro.train import optimizer as O
+from repro.train.metrics import MetricsLogger
+
+
+@dataclass
+class TrainJob:
+    cfg: ModelConfig
+    lr: float = 3e-4
+    steps: int = 100
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: Optional[str] = None
+    metrics_dir: Optional[str] = None
+    rules: Optional[MeshRules] = None
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    accum_steps: int = 1
+
+
+def train(job: TrainJob, batches: Iterator[Dict[str, np.ndarray]]
+          ) -> Dict[str, Any]:
+    cfg = job.cfg
+    spec = T.model_spec(cfg)
+    params = PRM.init_tree(spec, jax.random.key(job.seed), job.param_dtype)
+    opt = O.make_optimizer(cfg.optimizer)
+    opt_state = opt.init(params)
+    sched = O.warmup_cosine(job.lr, warmup=max(1, job.steps // 10),
+                            total=job.steps)
+
+    raw_step = ST.make_train_step(cfg, opt, lr=job.lr, rules=job.rules,
+                                  compute_dtype=job.compute_dtype,
+                                  accum_steps=job.accum_steps)
+    step_fn = jax.jit(raw_step, donate_argnums=(0, 1))
+
+    logger = MetricsLogger(job.metrics_dir, run=f"train_{cfg.arch_id}")
+    t0 = time.perf_counter()
+    last_metrics: Dict[str, Any] = {}
+    for i, batch in enumerate(batches):
+        if i >= job.steps:
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, jb)
+        if i % job.log_every == 0 or i == job.steps - 1:
+            last_metrics = {k: float(v) for k, v in metrics.items()}
+            logger.log(i, **last_metrics,
+                       tokens_per_s=(np.prod(jb["tokens"].shape)
+                                     * (i + 1)) / (time.perf_counter() - t0))
+        if job.ckpt_every and job.ckpt_dir and i and i % job.ckpt_every == 0:
+            CKPT.save(job.ckpt_dir, i, params, opt_state)
+    if job.ckpt_dir:
+        CKPT.save(job.ckpt_dir, job.steps, params, opt_state)
+    logger.close()
+    return {"params": params, "metrics": last_metrics,
+            "history": logger.records}

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests run on the single real CPU device; ONLY dryrun.py sets the
+# 512-device flag (see system design). Keep math on fp32 for tests.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,200 @@
+"""Communication layer + crypto substrate tests, incl. hypothesis
+property tests on the system invariants: codec roundtrip, Paillier
+homomorphism, PSI correctness, secure-agg mask cancellation."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.comm import codec
+from repro.comm.local import ThreadBus
+from repro.comm.sock import SocketCommunicator, local_addresses
+from repro.core import he, psi, secure_agg
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+_DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 5), st.integers(1, 4), st.integers(0, len(_DTYPES) - 1),
+       st.integers(0, 2**31 - 1))
+def test_codec_roundtrip_property(rank_extra, dim, dt_idx, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 5, size=min(rank_extra, 3)))
+    dt = _DTYPES[dt_idx]
+    if dt == np.bool_:
+        arr = rng.random(shape) > 0.5
+    else:
+        arr = (rng.random(shape) * 100).astype(dt)
+    blob = codec.encode({"x": arr, "y": np.arange(dim, dtype=np.int32)},
+                        {"tag": "t"})
+    out, meta = codec.decode(blob)
+    assert meta["tag"] == "t"
+    np.testing.assert_array_equal(out["x"], arr)
+
+
+def test_codec_bytes_tensors_preserve_nul():
+    """Binary strings with trailing NULs survive (the S-dtype trap)."""
+    raw = np.frombuffer(b"\x01\x02\x00\x00" * 3, np.uint8).reshape(3, 4)
+    out, _ = codec.decode(codec.encode({"b": raw}))
+    np.testing.assert_array_equal(out["b"], raw)
+    s = np.array([b"ab\x00\x00", b"\x00cd\x00"], dtype="S4")
+    out, _ = codec.decode(codec.encode({"s": s}))
+    assert out["s"].tobytes() == s.tobytes()
+
+
+def test_codec_header_is_safetensors_layout():
+    blob = codec.encode({"x": np.zeros((2, 2), np.float32)})
+    import json
+    import struct
+    (hlen,) = struct.unpack_from("<Q", blob, 0)
+    header = json.loads(blob[8:8 + hlen])
+    assert header["x"]["dtype"] == "F32"
+    assert header["x"]["shape"] == [2, 2]
+    assert header["x"]["data_offsets"] == [0, 16]
+
+
+# ---------------------------------------------------------------------------
+# communicators
+# ---------------------------------------------------------------------------
+
+
+def _pingpong(comm_a, comm_b):
+    out = {}
+
+    def a():
+        comm_a.send("b", "ping", {"x": np.arange(5, dtype=np.float32)})
+        out["a"] = comm_a.recv("b", "pong").tensor("x")
+
+    def b():
+        m = comm_b.recv("a", "ping")
+        comm_b.send("a", "pong", {"x": m.tensor("x") * 2})
+
+    ta, tb = threading.Thread(target=a), threading.Thread(target=b)
+    ta.start(); tb.start(); ta.join(30); tb.join(30)
+    return out["a"]
+
+
+def test_thread_communicator():
+    bus = ThreadBus(["a", "b"])
+    got = _pingpong(bus.communicator("a"), bus.communicator("b"))
+    np.testing.assert_array_equal(got, np.arange(5, dtype=np.float32) * 2)
+
+
+def test_socket_communicator():
+    addrs = local_addresses(["a", "b"])
+    ca, cb = SocketCommunicator("a", addrs), SocketCommunicator("b", addrs)
+    try:
+        got = _pingpong(ca, cb)
+        np.testing.assert_array_equal(got,
+                                      np.arange(5, dtype=np.float32) * 2)
+        assert ca.stats.sent_messages == 1
+        assert ca.stats.sent_bytes > 0
+    finally:
+        ca.close(); cb.close()
+
+
+def test_out_of_order_tags():
+    bus = ThreadBus(["a", "b"])
+    ca, cb = bus.communicator("a"), bus.communicator("b")
+    ca.send("b", "t1", {"x": np.array([1.0])})
+    ca.send("b", "t2", {"x": np.array([2.0])})
+    assert cb.recv("a", "t2").tensor("x")[0] == 2.0   # later tag first
+    assert cb.recv("a", "t1").tensor("x")[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Paillier
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return he.keygen(256)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(-10**6, 10**6), st.integers(-10**6, 10**6))
+def test_paillier_additive_homomorphism(a, b):
+    pub, priv = _KEYS
+    ca, cb = pub.encrypt_int(a), pub.encrypt_int(b)
+    assert priv.decrypt_int(pub.add(ca, cb)) == a + b
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(-10**4, 10**4), st.integers(-10**3, 10**3))
+def test_paillier_scalar_mult(a, k):
+    pub, priv = _KEYS
+    assert priv.decrypt_int(pub.mul_scalar(pub.encrypt_int(a), k)) == a * k
+
+
+_KEYS = he.keygen(256)
+
+
+def test_paillier_vector_roundtrip(keys):
+    pub, priv = keys
+    x = np.array([0.5, -1.25, 3.75, 0.0])
+    c = he.encrypt_vector(pub, x)
+    np.testing.assert_allclose(he.decrypt_vector(priv, c), x, atol=1e-8)
+
+
+def test_paillier_encrypted_matvec(keys):
+    pub, priv = keys
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(6, 3))
+    r = rng.normal(size=(6,))
+    enc_r = he.encrypt_vector(pub, r)
+    enc_g = he.matvec_cipher(pub, X, enc_r)
+    flat = [priv.decrypt_int(int(v)) for v in enc_g]
+    g = he.decode_fixed(flat, (3,), scale_bits=2 * he.SCALE_BITS)
+    np.testing.assert_allclose(g, X.T @ r, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# PSI
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 40), st.integers(0, 40),
+       st.integers(0, 40))
+def test_dh_psi_property(seed, n_common, n_a, n_b):
+    common = [f"c{i}" for i in range(n_common)]
+    only_a = [f"a{i}" for i in range(n_a)]
+    only_b = [f"b{i}" for i in range(n_b)]
+    inter, _ = psi.dh_psi(common + only_a, common + only_b)
+    assert inter == sorted(common)
+
+
+def test_salted_hash_matches_dh():
+    a = [f"u{i}" for i in range(50)]
+    b = [f"u{i}" for i in range(25, 70)]
+    assert psi.salted_hash_intersection(a, b, "s") == psi.dh_psi(a, b)[0]
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_mask_cancellation_property(n_parties, seed):
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.key(seed)
+    xs = [jax.random.normal(jax.random.fold_in(key, 100 + i), (4, 3))
+          for i in range(n_parties)]
+    masked = [secure_agg.mask_contribution(key, i, n_parties, x)
+              for i, x in enumerate(xs)]
+    # each masked tensor differs from its plaintext...
+    for x, m in zip(xs, masked):
+        assert float(jnp.abs(x - m).max()) > 1e-3
+    # ...but the aggregate is exact (identical values cancel)
+    np.testing.assert_allclose(
+        np.asarray(secure_agg.aggregate(masked)),
+        np.asarray(secure_agg.aggregate(xs)), atol=1e-4)

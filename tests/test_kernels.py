@@ -1,0 +1,140 @@
+"""Per-kernel allclose vs the pure-jnp oracle, sweeping shapes + dtypes
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+ATT_CASES = [
+    # b, h, kvh, s, dh, causal, window, dtype
+    (2, 4, 2, 256, 64, True, 0, jnp.float32),
+    (1, 4, 4, 128, 32, True, 64, jnp.float32),
+    (2, 2, 1, 128, 128, False, 0, jnp.float32),
+    (1, 8, 2, 512, 64, True, 128, jnp.float32),
+    (1, 2, 2, 256, 64, True, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,h,kvh,s,dh,causal,window,dtype", ATT_CASES)
+def test_flash_attention_vs_ref(b, h, kvh, s, dh, causal, window, dtype):
+    ks = jax.random.split(jax.random.key(hash((b, h, s)) % 2**31), 3)
+    q = _rand(ks[0], (b, h, s, dh), dtype)
+    k = _rand(ks[1], (b, kvh, s, dh), dtype)
+    v = _rand(ks[2], (b, kvh, s, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 32)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = _rand(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 256, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                              interpret=True)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+SSM_CASES = [
+    (1, 64, 32, 8, jnp.float32),
+    (2, 128, 64, 16, jnp.float32),
+    (1, 256, 32, 4, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,di,n,dtype", SSM_CASES)
+def test_selective_scan_vs_ref(b, s, di, n, dtype):
+    ks = jax.random.split(jax.random.key(s + di), 5)
+    dt = jax.nn.softplus(_rand(ks[0], (b, s, di), dtype)) * 0.1
+    bm = _rand(ks[1], (b, s, n), dtype)
+    cm = _rand(ks[2], (b, s, n), dtype)
+    u = _rand(ks[3], (b, s, di), dtype)
+    a = -jnp.exp(_rand(ks[4], (di, n), jnp.float32) * 0.5)
+    y1, h1 = ops.selective_scan(dt, bm, cm, u, a, block_d=32, chunk=32,
+                                interpret=True)
+    y2, h2 = ref.selective_scan_ref(dt, bm, cm, u, a)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=tol, rtol=tol)
+
+
+WKV_CASES = [
+    (1, 2, 64, 32, jnp.float32),
+    (2, 4, 128, 64, jnp.float32),
+    (1, 2, 128, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,h,s,dh,dtype", WKV_CASES)
+def test_rwkv6_wkv_vs_ref(b, h, s, dh, dtype):
+    ks = jax.random.split(jax.random.key(h * s), 5)
+    r = _rand(ks[0], (b, h, s, dh), dtype)
+    k = _rand(ks[1], (b, h, s, dh), dtype)
+    v = _rand(ks[2], (b, h, s, dh), dtype)
+    w = (jax.nn.sigmoid(_rand(ks[3], (b, h, s, dh), jnp.float32)) * 0.5
+         + 0.45).astype(dtype)
+    u = _rand(ks[4], (h, dh), jnp.float32) * 0.3
+    y1, s1 = ops.rwkv6_wkv(r, k, v, w, u, chunk=32, interpret=True)
+    y2, s2 = ref.rwkv6_ref(r, k, v, w, u)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-5
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=tol, rtol=tol)
+
+
+GMM_CASES = [
+    (4, 128, 64, 96, jnp.float32),
+    (8, 256, 128, 128, jnp.float32),
+    (2, 128, 128, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("e,c,d,f,dtype", GMM_CASES)
+def test_moe_gmm_vs_ref(e, c, d, f, dtype):
+    x = _rand(jax.random.key(e * c), (e, c, d), dtype)
+    w = _rand(jax.random.key(d * f), (e, d, f), dtype)
+    out = ops.moe_gmm(x, w, block_c=64, block_f=min(128, f),
+                      block_d=min(64, d), interpret=True)
+    expect = ref.gmm_ref(x, w)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_kernels_match_model_paths():
+    """The model's jnp attention equals the kernel on the same inputs
+    (layout transposed) — the integration contract."""
+    from repro.models.attention import attend
+    ks = jax.random.split(jax.random.key(11), 3)
+    b, h, kvh, s, dh = 1, 4, 2, 128, 64
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kvh, dh))
+    v = jax.random.normal(ks[2], (b, s, kvh, dh))
+    pos = jnp.arange(s)
+    model_out = attend(q, k, v, pos, pos, window=0, causal=True)
+    kernel_out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out),
+                               np.asarray(kernel_out.transpose(0, 2, 1, 3)),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,206 @@
+"""Sharding-rule resolution, optimizers, checkpointing, data pipeline."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import params as PRM, transformer as T
+from repro.sharding.rules import MeshRules, PARAM_RULES
+from repro.train import checkpoint as CKPT
+from repro.train import optimizer as O
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    """Shape-only stand-in so rule resolution is testable on 1 device."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_divisibility_fallback():
+    rules = MeshRules.__new__(MeshRules)
+    rules.mesh = _FakeMesh(data=16, model=16)
+    rules.param_rules = dict(PARAM_RULES)
+    rules.fallbacks = []
+    # glm4 kv_heads=2 cannot shard 16-way -> replicated, logged
+    spec = rules.spec(("embed", "kv_heads", "head_dim"), (4096, 2, 128),
+                      rules.param_rules, "wk")
+    assert spec == P("data", None, None)
+    assert any("kv_heads=2" in f for f in rules.fallbacks)
+    # mlp 13696 doesn't divide... it does (856): sharded
+    spec = rules.spec(("embed", "mlp"), (4096, 13696), rules.param_rules)
+    assert spec == P("data", "model")
+
+
+def test_axis_used_once_per_tensor():
+    rules = MeshRules.__new__(MeshRules)
+    rules.mesh = _FakeMesh(data=4, model=4)
+    rules.param_rules = {"a": ("model",), "b": ("model",)}
+    rules.fallbacks = []
+    spec = rules.spec(("a", "b"), (8, 8), rules.param_rules)
+    assert spec == P("model", None)   # second claim on 'model' dropped
+
+
+def test_param_shardings_resolve_on_local_mesh():
+    cfg = get_config("qwen3-14b").reduced()
+    mesh = make_local_mesh(1, 1)
+    rules = MeshRules(mesh)
+    spec = T.model_spec(cfg)
+    sds = PRM.abstract_tree(spec, jnp.float32)
+    axes = PRM.axes_tree(spec)
+    from repro.sharding.rules import param_shardings
+    sh = param_shardings(rules, axes, sds)
+    leaves = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert leaves and all(hasattr(s, "spec") for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(6, 4)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((6, 4)), "b": jnp.zeros((4,))}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2) + jnp.mean(p["b"] ** 2)
+    return params, loss
+
+
+@pytest.mark.parametrize("name", ["sgdm", "adamw", "adafactor"])
+def test_optimizers_descend(name):
+    params, loss = _quad_problem()
+    opt = O.make_optimizer(name)
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, jnp.float32(0.05))
+    assert float(loss(params)) < 0.25 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    opt = O.make_optimizer("adafactor")
+    state = opt.init(params)
+    assert state["slots"]["w"]["v_row"].shape == (64,)
+    assert state["slots"]["w"]["v_col"].shape == (32,)
+    assert state["slots"]["b"]["v"].shape == (32,)
+    # axes follow the same factoring
+    ax = opt.state_axes({"w": ("embed", "mlp"), "b": ("mlp",)})
+    assert ax["slots"]["w"]["v_row"] == ("embed",)
+    assert ax["slots"]["w"]["v_col"] == ("mlp",)
+
+
+def test_adamw_state_axes_mirror_params():
+    opt = O.make_optimizer("adamw")
+    ax = opt.state_axes({"w": ("embed", "mlp")})
+    assert ax["m"]["w"] == ("embed", "mlp")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    spec = T.model_spec(cfg)
+    params = PRM.init_tree(spec, jax.random.key(0), jnp.float32)
+    opt = O.make_optimizer("adamw")
+    state = opt.init(params)
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 7, params, state)
+        assert CKPT.latest_step(d) == 7
+        p2, s2 = CKPT.restore(d, 7, params, state)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(s2["count"]) == 0
+
+
+def test_checkpoint_bf16_roundtrip():
+    params = {"w": jnp.asarray([[1.5, -2.25]], jnp.bfloat16)}
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 1, params)
+        p2, _ = CKPT.restore(d, 1, params)
+        assert p2["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(p2["w"], np.float32),
+                                      np.asarray(params["w"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_recsys_matches_table1_density():
+    from repro.configs.vfl_recsys import VFLRecsysConfig
+    from repro.data.synthetic import make_recsys_silos
+    cfg = VFLRecsysConfig().reduced()
+    data = make_recsys_silos(cfg, seed=0)
+    density = data.labels.mean()
+    expect = cfg.n_interactions / (cfg.n_users * cfg.n_items)
+    assert abs(density - min(expect, 1.0)) < 0.05
+    assert data.features.shape == (cfg.n_users, cfg.n_other_features)
+    assert len(data.member_ids[0]) == int(cfg.id_overlap * cfg.n_users)
+
+
+def test_lm_batches_are_deterministic():
+    from repro.data.synthetic import make_lm_batches
+    a = list(make_lm_batches(100, 2, 16, 3, seed=5))
+    b = list(make_lm_batches(100, 2, 16, 3, seed=5))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# §Perf policy
+# ---------------------------------------------------------------------------
+
+
+def test_recommended_opts_policy():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import recommended_opts
+    # MoE with small experts -> grouped dispatch + DP experts
+    assert recommended_opts(get_config("granite-moe-3b-a800m"),
+                            SHAPES["train_4k"]) == "moegroup,moedp"
+    # MoE with big experts keeps EP
+    assert recommended_opts(get_config("jamba-1.5-large-398b"),
+                            SHAPES["train_4k"]) == "moegroup"
+    # dense decode: TP-only weights + partial-softmax
+    assert recommended_opts(get_config("glm4-9b"),
+                            SHAPES["decode_32k"]) \
+        == "noweightfsdp,decodeps"
+    # batch=1 decode must NOT use the partial-softmax path
+    assert "decodeps" not in recommended_opts(
+        get_config("h2o-danube-1.8b"), SHAPES["long_500k"])
+    # dense train: baseline is the best known config
+    assert recommended_opts(get_config("qwen3-14b"),
+                            SHAPES["train_4k"]) == ""
+
+
+def test_recsys_metrics():
+    from repro.train.evals import auc, ndcg_at_k, precision_at_k
+    rng = np.random.default_rng(0)
+    labels = (rng.random((50, 10)) < 0.3).astype(np.float64)
+    perfect = labels + rng.random((50, 10)) * 0.01
+    rand = rng.random((50, 10))
+    assert auc(perfect, labels) > 0.99
+    assert 0.4 < auc(rand, labels) < 0.6
+    assert precision_at_k(perfect, labels, 3) >= precision_at_k(
+        rand, labels, 3)
+    assert ndcg_at_k(perfect, labels, 5) > 0.99
+    # antiperfect scores -> worst ranking
+    assert auc(-perfect, labels) < 0.01
