@@ -99,9 +99,9 @@ def bench_table1_demo(quick: bool):
                         data.features)
     members = [MemberData(i, x) for i, x in
                zip(data.member_ids, data.member_features)]
-    for proto, epochs in (("linreg", 3), ("split_nn", 3)):
+    for proto, epochs, lr in (("linreg", 3, 0.05), ("split_nn", 3, 0.3)):
         cfg = VFLConfig(protocol=proto, epochs=epochs, batch_size=64,
-                        lr=0.05, use_psi=False, embedding_dim=16)
+                        lr=lr, use_psi=False, embedding_dim=16)
         t0 = time.perf_counter()
         res = run_vfl(cfg, master, members, mode="thread")
         dt = (time.perf_counter() - t0) * 1e6
@@ -110,17 +110,29 @@ def bench_table1_demo(quick: bool):
              f"loss {h[0]['loss']:.4f}->{h[-1]['loss']:.4f} "
              f"bytes={res['master']['comm']['sent_bytes']}")
     if not quick:
+        import dataclasses
         yb = master.y[:, :1]
         cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32,
                         lr=0.5, use_psi=False, he_bits=256)
-        t0 = time.perf_counter()
-        res = run_vfl(cfg, MasterData(master.ids, yb, master.x), members,
-                      mode="thread")
-        dt = (time.perf_counter() - t0) * 1e6
-        h = res["master"]["history"]
-        emit("demo_logreg_he", dt / max(len(h), 1),
+        rows = {}
+        for packed in (False, True):
+            c = dataclasses.replace(cfg, he_packed=packed)
+            t0 = time.perf_counter()
+            res = run_vfl(c, MasterData(master.ids, yb, master.x),
+                          members, mode="thread")
+            dt = (time.perf_counter() - t0) * 1e6
+            h = res["master"]["history"]
+            rows[packed] = (dt / max(len(h), 1), h,
+                            res["arbiter"]["decrypted_values"])
+        us_s, h, dec_s = rows[False]
+        emit("demo_logreg_he_scalar", us_s,
              f"loss {h[0]['loss']:.4f}->{h[-1]['loss']:.4f} "
-             f"decrypted={res['arbiter']['decrypted_values']}")
+             f"decrypted={dec_s}")
+        us_p, h, dec_p = rows[True]
+        emit("demo_logreg_he", us_p,
+             f"loss {h[0]['loss']:.4f}->{h[-1]['loss']:.4f} "
+             f"decrypted={dec_p} speedup_x{us_s / max(us_p, 1):.2f} "
+             f"decrypt_drop_x{dec_s / max(dec_p, 1):.2f}")
 
 
 def bench_he():
@@ -128,10 +140,52 @@ def bench_he():
     pub, priv = he.keygen(256)
     us = _timeit(lambda: pub.encrypt_int(12345), 20)
     emit("paillier_encrypt_256b", us, "key=256bit")
+    pool = he.RandomnessPool(pub)
+    us_pool = _timeit(lambda: pool.encrypt_int(12345), 20)
+    emit("paillier_encrypt_pooled_256b", us_pool,
+         f"speedup_x{us / max(us_pool, 1e-9):.2f}")
     c = pub.encrypt_int(12345)
-    emit("paillier_decrypt_256b", _timeit(lambda: priv.decrypt_int(c), 20),
-         "")
+    us_plain = _timeit(lambda: priv.decrypt_int_plain(c), 20)
+    emit("paillier_decrypt_256b", us_plain, "")
+    us_crt = _timeit(lambda: priv.decrypt_int_crt(c), 20)
+    emit("paillier_decrypt_crt_256b", us_crt,
+         f"speedup_x{us_plain / max(us_crt, 1e-9):.2f}")
     emit("paillier_add", _timeit(lambda: pub.add(c, c), 50), "")
+
+
+def bench_he_packed(quick: bool = False):
+    """Packed-vs-scalar homomorphic matvec + packing-factor sweep."""
+    from repro.core import he
+    rng = np.random.default_rng(0)
+    b, d = 32, 32
+    x = rng.normal(size=(b, d))
+    r = rng.normal(size=b) / b
+    x_int = he.encode_fixed(x).reshape(b, d)
+    r_int = he.encode_fixed(r)
+    rb = int(np.abs(r_int).max())
+    for bits in ((256,) if quick else (256, 512)):
+        pub, priv = he.keygen(bits)
+        ciphers = [pub.encrypt_int(int(v)) for v in r_int]
+        c_arr = np.array(ciphers, dtype=object)
+
+        def scalar():
+            cts = he.matvec_cipher(pub, x, c_arr)
+            return [priv.decrypt_int_plain(int(v)) for v in cts]
+
+        def packed():
+            cts, info = he.packed_matvec(pub, x_int, ciphers, rb)
+            return he.unpack_matvec([priv.decrypt_int(v) for v in cts],
+                                    info["slot_bits"], info["k"],
+                                    info["off_bits"], d)
+
+        assert packed() == scalar(), "paths must agree exactly"
+        us_s = _timeit(scalar, 2)
+        us_p = _timeit(packed, 2)
+        info = he.matvec_slot_plan(pub, x_int, rb)
+        emit(f"he_matvec_scalar_{bits}b", us_s, f"B={b} d={d}")
+        emit(f"he_matvec_packed_{bits}b", us_p,
+             f"K={info['k']} slot_bits={info['slot_bits']} "
+             f"speedup_x{us_s / max(us_p, 1e-9):.2f}")
 
 
 def bench_psi():
@@ -306,6 +360,7 @@ def main() -> None:
     bench_comm_modes()
     bench_table1_demo(args.quick)
     bench_he()
+    bench_he_packed(args.quick)
     bench_psi()
     bench_kernels(args.quick)
     bench_vfl_scaling()
@@ -316,6 +371,10 @@ def main() -> None:
     (RESULTS / "bench.csv").write_text(
         "name,us_per_call,derived\n" + "\n".join(
             f"{n},{u:.2f},{d}" for n, u, d in ROWS))
+    # machine-readable mirror so the perf trajectory is trackable in CI
+    (RESULTS / "bench.json").write_text(json.dumps(
+        [{"name": n, "us_per_call": round(u, 2), "derived": d}
+         for n, u, d in ROWS], indent=1))
 
 
 if __name__ == "__main__":

@@ -25,8 +25,8 @@ from repro.models import params as PRM, transformer as T    # noqa: E402
 def main():
     n_parties, B, d_feat = 2, 8, 32
     cfg = get_config("granite-moe-3b-a800m").reduced()
-    mesh = jax.make_mesh((n_parties, 2), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((n_parties, 2), ("pod", "data"))
 
     key = jax.random.key(0)
     spec = T.model_spec(cfg)

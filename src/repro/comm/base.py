@@ -100,10 +100,11 @@ class PartyCommunicator(abc.ABC):
         return msg
 
     def broadcast(self, tag: str, payload: Payload,
-                  targets: Optional[Sequence[str]] = None) -> None:
+                  targets: Optional[Sequence[str]] = None,
+                  meta: Optional[Dict[str, str]] = None) -> None:
         for t in (targets if targets is not None else self.world):
             if t != self.me:
-                self.send(t, tag, payload)
+                self.send(t, tag, payload, meta=meta)
 
     def gather(self, frm: Sequence[str], tag: str) -> List[Message]:
         return [self.recv(f, tag) for f in frm]

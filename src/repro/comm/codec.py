@@ -77,3 +77,31 @@ def decode(blob: bytes) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
 
 def nbytes(tensors: Dict[str, np.ndarray]) -> int:
     return sum(np.ascontiguousarray(a).nbytes for a in tensors.values())
+
+
+# ---------------------------------------------------------------------------
+# big-int transport (ciphertexts, blinded PSI points)
+# ---------------------------------------------------------------------------
+# Widths are *derived from the key size* by the sender and carried in
+# message metadata — nothing on the wire is hardcoded, so 2048-bit+
+# Paillier ciphertexts transport without truncation.
+
+
+def int_width(n: int) -> int:
+    """Bytes needed for non-negative ints < n (e.g. n = modulus)."""
+    return max(1, ((n - 1).bit_length() + 7) // 8)
+
+
+def ints_to_u8(vals, width: int) -> np.ndarray:
+    """Non-negative big ints -> (len, width) uint8 big-endian rows."""
+    buf = b"".join(int(v).to_bytes(width, "big") for v in vals)
+    return np.frombuffer(buf, np.uint8).reshape(len(vals), width)
+
+
+def u8_to_ints(arr: np.ndarray) -> list:
+    """Inverse of ints_to_u8 for any trailing-dim width."""
+    flat = np.ascontiguousarray(arr).reshape(-1, arr.shape[-1])
+    data = flat.tobytes()
+    w = arr.shape[-1]
+    return [int.from_bytes(data[i * w:(i + 1) * w], "big")
+            for i in range(flat.shape[0])]

@@ -28,6 +28,10 @@ class VFLConfig:
     l2: float = 0.0
     seed: int = 0
     he_bits: int = 256            # Paillier key size (tests keep it small)
+    # batched-HE path: pack K gradient values per Paillier ciphertext and
+    # use the shared-squaring multi-exponentiation matvec (DESIGN.md §3).
+    # False falls back to the scalar one-modexp-per-element reference.
+    he_packed: bool = True
     embedding_dim: int = 16       # split-nn bottom output width
     hidden: Tuple[int, ...] = (32,)
     use_psi: bool = True          # DH-PSI vs salted-hash matching

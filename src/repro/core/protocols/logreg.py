@@ -6,14 +6,24 @@ Flow per batch:
 1. parties send partial logits to the master (plaintext — logits are
    aggregates, not raw data),
 2. the master computes the residual r = sigma(z) - y, ENCRYPTS it with
-   the arbiter's Paillier public key, and broadcasts Enc(r) to members,
+   the arbiter's Paillier public key (blinding factors come from a
+   precomputed randomness pool, so hot-path encryption is two mults),
+   and broadcasts Enc(r) to members,
 3. each member computes its encrypted gradient X_p^T Enc(r) using only
-   homomorphic scalar-mult/add (it never sees r),
-4. members send Enc(g_p) to the arbiter, who decrypts and returns g_p to
-   the owning member only.
+   homomorphic scalar-mult/add (it never sees r) — by default via the
+   *packed* matvec: K gradient slots per ciphertext, one exponentiation
+   per (sample, chunk) with shared Straus tables (DESIGN.md §3),
+4. members send Enc(g_p) to the arbiter, who decrypts (CRT-accelerated)
+   and returns g_p to the owning member only. Packing means the arbiter
+   decrypts ~d/K ciphertexts instead of d.
 
 So: members never see residuals (which leak label information), the
 master never sees member gradients, and the arbiter never sees features.
+Ciphertexts ride as uint8 rows whose width is derived from the key size
+and carried in message metadata (no hardcoded wire widths — 2048-bit
+keys transport unharmed). The master additionally publishes the
+fixed-point bound max|r_i| so members can size slots tightly; that
+single magnitude is the only extra leakage (DESIGN.md §3.6).
 """
 from __future__ import annotations
 
@@ -21,6 +31,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.comm import codec
 from repro.comm.base import PartyCommunicator
 from repro.core import he
 from repro.core.protocols import base
@@ -33,25 +44,29 @@ def _sigmoid(z):
     return 1.0 / (1.0 + np.exp(-z))
 
 
-def _cipher_to_arr(c: np.ndarray) -> np.ndarray:
-    """Ciphertexts ride as uint8 (n, 256) — S-dtypes strip NUL bytes."""
-    flat = [int(v) for v in np.ravel(c)]
-    buf = b"".join(v.to_bytes(256, "big") for v in flat)
-    return np.frombuffer(buf, np.uint8).reshape(c.shape + (256,))
+def _check_width(msg, name: str, width: int) -> None:
+    """Cross-check the metadata-declared big-int width against the
+    tensor's trailing dim — catches peers framing ciphertexts with a
+    different key size before they decode to garbage."""
+    if width and msg.tensor(name).shape[-1] != width:
+        raise ValueError(
+            f"{msg.tag}: ciphertext width {msg.tensor(name).shape[-1]} "
+            f"!= declared {width} (key-size mismatch between parties?)")
 
 
-def _arr_to_cipher(a: np.ndarray) -> np.ndarray:
-    shape = a.shape[:-1]
-    flat = a.reshape(-1, a.shape[-1])
-    vals = [int.from_bytes(bytes(bytearray(row)), "big") for row in flat]
-    return np.array(vals, dtype=object).reshape(shape)
+def _recv_pubkey(comm: PartyCommunicator) -> he.PublicKey:
+    msg = comm.recv("arbiter", "he/pubkey")
+    _check_width(msg, "n", int(msg.meta.get("n_bytes", 0)))
+    return he.PublicKey(int.from_bytes(msg.tensor("n").tobytes(), "big"))
 
 
 def arbiter_fn(comm: PartyCommunicator, _data, cfg: VFLConfig) -> Dict:
     pub, priv = he.keygen(cfg.he_bits)
-    n_arr = np.frombuffer(pub.n.to_bytes(256, "big"), np.uint8)
-    comm.broadcast("he/pubkey", {"n": n_arr})
-    decrypted = 0
+    n_arr = np.frombuffer(pub.n.to_bytes(pub.n_bytes, "big"), np.uint8)
+    comm.broadcast("he/pubkey", {"n": n_arr},
+                   meta={"n_bytes": str(pub.n_bytes)})
+    decrypted = 0           # Paillier decryption ops (ciphertexts)
+    values = 0              # gradient values recovered from them
     while True:
         msg = comm.recv("master", "arbiter/ctrl")
         if int(msg.tensor("op")[0]) == 0:       # shutdown
@@ -59,79 +74,121 @@ def arbiter_fn(comm: PartyCommunicator, _data, cfg: VFLConfig) -> Dict:
         # one decryption round: every member sends an encrypted gradient
         for m in comm.members:
             enc = comm.recv(m, "logreg/enc_grad")
-            cipher = _arr_to_cipher(enc.tensor("g"))
-            flat = [priv.decrypt_int(int(v)) for v in np.ravel(cipher)]
-            g = he.decode_fixed(flat, cipher.shape,
+            _check_width(enc, "g", int(enc.meta.get("width", 0)))
+            cts = codec.u8_to_ints(enc.tensor("g"))
+            if enc.meta.get("packed") == "1":
+                plains = [priv.decrypt_int(c) for c in cts]
+                flat = he.unpack_matvec(plains,
+                                        int(enc.meta["slot_bits"]),
+                                        int(enc.meta["k"]),
+                                        int(enc.meta["off_bits"]),
+                                        int(enc.meta["count"]))
+            else:
+                flat = [priv.decrypt_int(c) for c in cts]
+            g = he.decode_fixed(flat, (len(flat),),
                                 scale_bits=2 * he.SCALE_BITS)
             comm.send(m, "logreg/grad", {"g": g})
-            decrypted += cipher.size
-    return {"decrypted_values": decrypted, "comm": comm.stats.as_dict()}
+            decrypted += len(cts)
+            values += len(flat)
+    return {"decrypted_values": decrypted, "recovered_values": values,
+            "comm": comm.stats.as_dict()}
 
 
 def master_fn(comm: PartyCommunicator, data: MasterData,
               cfg: VFLConfig) -> Dict:
-    pub = he.PublicKey(int.from_bytes(
-        bytes(bytearray(comm.recv("arbiter", "he/pubkey").tensor("n"))),
-        "big"))
-    order = master_match(comm, data, cfg)
-    y = base._select(data.ids, order, data.y).astype(np.float64)
-    x = base._select(data.ids, order, data.x).astype(np.float64) \
-        if data.x is not None else None
-    n, items = y.shape
-    assert items == 1, "arbitered logreg: single binary target"
-    comm.broadcast("logreg/setup", {"items": np.array([items])},
-                   targets=comm.members)
-    w = np.zeros((x.shape[1], 1)) if x is not None else None
-    history: List[Dict] = []
-    step = 0
-    for epoch in range(cfg.epochs):
-        for rows in batches(n, cfg, epoch):
-            zb = np.zeros((len(rows), 1))
-            if x is not None:
-                zb += x[rows] @ w
-            for msg in comm.gather(comm.members, f"logreg/z/{step}"):
-                zb += msg.tensor("z")
-            p = _sigmoid(zb)
-            r = (p - y[rows]) / len(rows)            # (B, 1)
-            enc_r = he.encrypt_vector(pub, r[:, 0])
-            comm.send("arbiter", "arbiter/ctrl", {"op": np.array([1])})
-            comm.broadcast(f"logreg/enc_resid/{step}",
-                           {"r": _cipher_to_arr(enc_r)},
-                           targets=comm.members)
-            if x is not None:
-                w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
-            eps = 1e-9
-            loss = float(-np.mean(y[rows] * np.log(p + eps)
-                                  + (1 - y[rows]) * np.log(1 - p + eps)))
-            if step % cfg.record_every == 0:
-                history.append({"step": step, "epoch": epoch, "loss": loss})
-            step += 1
-    comm.send("arbiter", "arbiter/ctrl", {"op": np.array([0])})
-    comm.broadcast("logreg/done", {"ok": np.array([1])},
-                   targets=comm.members)
+    pub = _recv_pubkey(comm)
+    pool = he.RandomnessPool(pub)
+    try:
+        pool.start(target=2 * cfg.batch_size)
+        order = master_match(comm, data, cfg)
+        y = base._select(data.ids, order, data.y).astype(np.float64)
+        x = base._select(data.ids, order, data.x).astype(np.float64) \
+            if data.x is not None else None
+        n, items = y.shape
+        assert items == 1, "arbitered logreg: single binary target"
+        comm.broadcast("logreg/setup", {"items": np.array([items])},
+                       targets=comm.members)
+        w = np.zeros((x.shape[1], 1)) if x is not None else None
+        history: List[Dict] = []
+        step = 0
+        width = pub.cipher_bytes
+        for epoch in range(cfg.epochs):
+            for rows in batches(n, cfg, epoch):
+                zb = np.zeros((len(rows), 1))
+                if x is not None:
+                    zb += x[rows] @ w
+                for msg in comm.gather(comm.members, f"logreg/z/{step}"):
+                    zb += msg.tensor("z")
+                p = _sigmoid(zb)
+                r = (p - y[rows]) / len(rows)            # (B, 1)
+                r_int = he.encode_fixed(r[:, 0])
+                enc_r = [pub.encrypt_int(int(v), rn=pool.take())
+                         for v in r_int]
+                comm.send("arbiter", "arbiter/ctrl", {"op": np.array([1])})
+                comm.broadcast(
+                    f"logreg/enc_resid/{step}",
+                    {"r": codec.ints_to_u8(enc_r, width)},
+                    targets=comm.members,
+                    meta={"width": str(width),
+                          "rb": str(max(1, int(np.abs(r_int).max())))})
+                if x is not None:
+                    w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
+                eps = 1e-9
+                loss = float(-np.mean(y[rows] * np.log(p + eps)
+                                      + (1 - y[rows]) * np.log(1 - p + eps)))
+                if step % cfg.record_every == 0:
+                    history.append({"step": step, "epoch": epoch,
+                                    "loss": loss})
+                step += 1
+        comm.send("arbiter", "arbiter/ctrl", {"op": np.array([0])})
+        comm.broadcast("logreg/done", {"ok": np.array([1])},
+                       targets=comm.members)
+    finally:
+        pool.stop()
     return {"history": history, "w_master": w, "n_common": n,
             "comm": comm.stats.as_dict()}
 
 
 def member_fn(comm: PartyCommunicator, data: MemberData,
               cfg: VFLConfig) -> Dict:
-    pub = he.PublicKey(int.from_bytes(
-        bytes(bytearray(comm.recv("arbiter", "he/pubkey").tensor("n"))),
-        "big"))
+    pub = _recv_pubkey(comm)
+    pool = he.RandomnessPool(pub) if cfg.he_packed else None
     order = member_match(comm, data, cfg)
     x = base._select(data.ids, order, data.x).astype(np.float64)
     n = len(order)
     comm.recv("master", "logreg/setup")
     w = np.zeros((x.shape[1], 1))
+    width = pub.cipher_bytes
     step = 0
     for epoch in range(cfg.epochs):
         for rows in batches(n, cfg, epoch):
             comm.send("master", f"logreg/z/{step}", {"z": x[rows] @ w})
-            enc_r = _arr_to_cipher(
-                comm.recv("master", f"logreg/enc_resid/{step}").tensor("r"))
-            enc_g = he.matvec_cipher(pub, x[rows], enc_r)     # (d,) cipher
-            comm.send("arbiter", "logreg/enc_grad",
-                      {"g": _cipher_to_arr(enc_g)})
+            msg = comm.recv("master", f"logreg/enc_resid/{step}")
+            _check_width(msg, "r", int(msg.meta.get("width", 0)))
+            enc_r = codec.u8_to_ints(msg.tensor("r"))
+            packed = None
+            if cfg.he_packed:
+                x_int = he.encode_fixed(x[rows]).reshape(len(rows), -1)
+                rb = int(msg.meta.get("rb", 1 << he.SCALE_BITS))
+                try:
+                    packed = he.packed_matvec(pub, x_int, enc_r, rb,
+                                              pool=pool)
+                except ValueError:
+                    # slot wider than the key's plaintext (tiny he_bits /
+                    # huge values): degrade to the scalar reference path
+                    packed = None
+            if packed is not None:
+                cts, info = packed
+                comm.send("arbiter", "logreg/enc_grad",
+                          {"g": codec.ints_to_u8(cts, width)},
+                          meta={"packed": "1", "width": str(width),
+                                **{k: str(v) for k, v in info.items()}})
+            else:
+                enc_g = he.matvec_cipher(pub, x[rows],
+                                         np.array(enc_r, dtype=object))
+                comm.send("arbiter", "logreg/enc_grad",
+                          {"g": codec.ints_to_u8(enc_g, width)},
+                          meta={"width": str(width)})
             g = comm.recv("arbiter", "logreg/grad").tensor("g")
             w -= cfg.lr * (g[:, None] + cfg.l2 * w)
             step += 1

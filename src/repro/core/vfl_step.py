@@ -27,6 +27,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import secure_agg
 from repro.core.protocols.split_nn import _bce, mlp_apply, mlp_init
+from repro.sharding.rules import shard_map_compat
 
 
 def init_party_params(key, n_parties: int, d_in: int, hidden, e: int):
@@ -60,7 +61,7 @@ def make_mesh_vfl_step(mesh: Mesh, n_parties: int, lr: float = 0.05,
                     u = u + mask
                 return jax.lax.psum(u, "pod")
 
-            agg = jax.shard_map(
+            agg = shard_map_compat(
                 party_fwd, mesh=mesh,
                 in_specs=(P("pod"), P("pod")),
                 out_specs=P())(bottoms, x)

@@ -14,20 +14,25 @@ HBM_BW = 819e9                    # bytes/s per chip
 ICI_BW = 50e9                     # bytes/s per link
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh with Auto axis types, version-compat: AxisType
+    landed after jax 0.4.x; older versions default to Auto anyway."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Tiny mesh over whatever devices exist (tests)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def mesh_chips(mesh: jax.sharding.Mesh) -> int:

@@ -4,7 +4,7 @@ split-NN training with payload accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import compression
 from repro.core.party import run_vfl

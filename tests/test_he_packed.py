@@ -1,0 +1,337 @@
+"""Batched-HE correctness at scale: packing round-trips, homomorphic
+ops on packed ciphertexts, CRT == plain decryption, randomness-pool
+encryptions, the packed matvec vs numpy, variable-width ciphertext
+transport, and packed-vs-unpacked end-to-end logreg_he equivalence."""
+import threading
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.comm import codec
+from repro.core import he
+
+_KEYS = he.keygen(256)
+
+
+# ---------------------------------------------------------------------------
+# balanced-digit packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 24), st.integers(8, 60))
+def test_pack_unpack_roundtrip_property(seed, count, slot_bits):
+    rng = np.random.default_rng(seed)
+    half = 1 << (slot_bits - 1)
+    vals = [int(rng.integers(-half + 1, half)) for _ in range(count)]
+    assert he.unpack_signed(he.pack_signed(vals, slot_bits),
+                            slot_bits, count) == vals
+
+
+def test_pack_handles_borrow_chains():
+    """Adjacent negative slots exercise big-int borrow propagation."""
+    vals = [-1, -1, 7, -3, 0, -(2**15) + 1, 2**15 - 1]
+    p = he.pack_signed(vals, 17)
+    assert he.unpack_signed(p, 17, len(vals)) == vals
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40))
+def test_packed_encrypt_roundtrip(seed, count):
+    pub, priv = _KEYS
+    rng = np.random.default_rng(seed)
+    vals = [int(v) for v in rng.integers(-2**40, 2**40, count)]
+    cts = he.encrypt_packed(pub, vals, slot_bits=50)
+    assert len(cts) < count or count == 1      # actually packs
+    assert he.decrypt_packed(priv, cts, 50, count) == vals
+
+
+def test_packed_homomorphic_add_and_scalar_mul():
+    """pack -> encrypt -> add / mul_scalar -> decrypt -> unpack exactness
+    vs numpy, within the guard-bit budget."""
+    pub, priv = _KEYS
+    rng = np.random.default_rng(1)
+    a = rng.integers(-2**30, 2**30, 12)
+    b = rng.integers(-2**30, 2**30, 12)
+    slot = 44                                   # 31 value bits + guard
+    ca = he.encrypt_packed(pub, [int(v) for v in a], slot)
+    cb = he.encrypt_packed(pub, [int(v) for v in b], slot)
+    summed = [pub.add(x, y) for x, y in zip(ca, cb)]
+    assert he.decrypt_packed(priv, summed, slot, 12) == list(a + b)
+    scaled = [pub.mul_scalar(x, 5) for x in ca]
+    assert he.decrypt_packed(priv, scaled, slot, 12) == list(a * 5)
+
+
+# ---------------------------------------------------------------------------
+# CRT decryption
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(-10**12, 10**12))
+def test_crt_decrypt_equals_plain(m):
+    pub, priv = _KEYS
+    c = pub.encrypt_int(m)
+    assert priv.decrypt_int_crt(c) == priv.decrypt_int_plain(c) == m
+
+
+def test_crt_decrypt_edges():
+    pub, priv = _KEYS
+    half = pub.n // 2
+    for m in (0, 1, -1, half, -half + 1):
+        c = pub.encrypt_int(m)
+        assert priv.decrypt_int_crt(c) == priv.decrypt_int_plain(c) == m
+
+
+def test_privatekey_without_factors_still_decrypts():
+    pub, priv = _KEYS
+    legacy = he.PrivateKey(pub, priv.lam, priv.mu)   # no p/q: plain path
+    c = pub.encrypt_int(-31337)
+    assert legacy.decrypt_int(c) == -31337
+
+
+# ---------------------------------------------------------------------------
+# randomness pool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_encryptions_decrypt_identically():
+    pub, priv = _KEYS
+    pool = he.RandomnessPool(pub)
+    pool.prefill(8)
+    cts = [pool.encrypt_int(4242) for _ in range(10)]  # 8 pooled + 2 inline
+    assert len(set(cts)) == len(cts), "blindings must be fresh"
+    assert all(priv.decrypt_int(c) == 4242 for c in cts)
+    # pooled and cold-path ciphertexts are interchangeable under ops
+    c = pub.add(cts[0], pub.encrypt_int(-42))
+    assert priv.decrypt_int(c) == 4200
+
+
+def test_pool_background_fill_and_stop():
+    pub, _ = _KEYS
+    pool = he.RandomnessPool(pub)
+    pool.start(target=6)
+    deadline = threading.Event()
+    for _ in range(100):
+        if len(pool) >= 6:
+            break
+        deadline.wait(0.05)
+    assert len(pool) >= 6
+    pool.stop()
+    assert pool._thread is None
+
+
+def test_pooled_vector_encrypt_matches_plain_decrypt():
+    pub, priv = _KEYS
+    pool = he.RandomnessPool(pub)
+    x = np.array([0.5, -1.25, 3.75, 0.0])
+    c = he.encrypt_vector(pub, x, pool=pool)
+    np.testing.assert_allclose(he.decrypt_vector(priv, c), x, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# multi-exponentiation + packed matvec
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+def test_multi_pow_matches_naive(seed, nbases):
+    pub, _ = _KEYS
+    rng = np.random.default_rng(seed)
+    bases = [int.from_bytes(rng.bytes(8), "big") + 2
+             for _ in range(nbases)]
+    exps = [int.from_bytes(rng.bytes(10), "big") for _ in range(nbases)]
+    tabs = he.pow_tables(bases, pub.n_sq)
+    want = 1
+    for b, e in zip(bases, exps):
+        want = want * pow(b, e, pub.n_sq) % pub.n_sq
+    assert he.multi_pow(exps, pub.n_sq, tabs) == want
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 24), st.integers(1, 24))
+def test_packed_matvec_exact_vs_numpy(seed, b, d):
+    """Packed homomorphic X^T r equals the exact integer matvec."""
+    pub, priv = _KEYS
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)) * 3
+    r = rng.normal(size=b) / b
+    x_int = he.encode_fixed(x).reshape(b, d)
+    r_int = he.encode_fixed(r)
+    ciphers = [pub.encrypt_int(int(v)) for v in r_int]
+    cts, info = he.packed_matvec(pub, x_int, ciphers,
+                                 int(np.abs(r_int).max()))
+    plains = [priv.decrypt_int(c) for c in cts]
+    got = he.unpack_matvec(plains, info["slot_bits"], info["k"],
+                           info["off_bits"], d)
+    want = [int(sum(int(xv) * int(rv) for xv, rv in
+                    zip(x_int[:, j], r_int))) for j in range(d)]
+    assert got == want
+    # ...and therefore matches numpy to fixed-point precision
+    g = he.decode_fixed(got, (d,), scale_bits=2 * he.SCALE_BITS)
+    np.testing.assert_allclose(g, x.T @ r, atol=1e-7)
+    # the packing actually batches: fewer ciphertexts than features
+    if d > info["k"] >= 2:
+        assert len(cts) < d
+
+
+def test_packed_matvec_matches_scalar_matvec():
+    """Same integers out of both member gradient paths."""
+    pub, priv = _KEYS
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(8, 5))
+    r = rng.normal(size=8) / 8
+    r_int = he.encode_fixed(r)
+    ciphers = [pub.encrypt_int(int(v)) for v in r_int]
+    x_int = he.encode_fixed(x).reshape(8, 5)
+    cts, info = he.packed_matvec(pub, x_int, ciphers,
+                                 int(np.abs(r_int).max()))
+    packed = he.unpack_matvec([priv.decrypt_int(c) for c in cts],
+                              info["slot_bits"], info["k"],
+                              info["off_bits"], 5)
+    scalar_cts = he.matvec_cipher(pub, x, np.array(ciphers, dtype=object))
+    scalar = [priv.decrypt_int(int(c)) for c in scalar_cts]
+    assert packed == scalar
+
+
+# ---------------------------------------------------------------------------
+# variable-width wire transport
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 20), st.integers(1, 96))
+def test_cipher_wire_roundtrip(seed, count, width):
+    rng = np.random.default_rng(seed)
+    vals = [int.from_bytes(rng.bytes(width), "big") for _ in range(count)]
+    arr = codec.ints_to_u8(vals, width)
+    assert arr.shape == (count, width)
+    assert codec.u8_to_ints(arr) == vals
+    # survives the safetensors codec (the actual wire)
+    out, _ = codec.decode(codec.encode({"c": arr}))
+    assert codec.u8_to_ints(out["c"]) == vals
+
+
+def test_encode_fixed_rejects_nan_inf():
+    """NaN must fail fast (the seed's int(round()) raised too), not be
+    silently cast to INT64_MIN and encrypted."""
+    with pytest.raises(ValueError):
+        he.encode_fixed(np.array([np.nan, 1.0]))
+    with pytest.raises(ValueError):
+        he.encode_fixed(np.array([np.inf]))
+    with pytest.raises(OverflowError):
+        he.encode_fixed(np.array([2.0 ** 40]))   # overflows at scale 32
+
+
+def test_packed_matvec_rejects_oversized_slots():
+    """A key too small for even one slot raises instead of silently
+    wrapping past n/2 (and the protocol degrades to the scalar path)."""
+    pub, _ = he.keygen(64)       # 62-bit capacity < one ~74-bit slot
+    rng = np.random.default_rng(0)
+    x_int = he.encode_fixed(rng.normal(size=(4, 3))).reshape(4, 3)
+    ciphers = [pub.encrypt_int(1)] * 4
+    with pytest.raises(ValueError):
+        he.packed_matvec(pub, x_int, ciphers, 1 << he.SCALE_BITS)
+
+
+def test_logreg_he_k1_boundary_key():
+    """128-bit keys fit exactly one slot (K=1): packing still correct."""
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import VFLConfig
+    from repro.data.vertical import vertical_partition
+
+    rng = np.random.default_rng(2)
+    n, d = 64, 6
+    x = rng.normal(size=(n, d))
+    y = (x @ rng.normal(size=(d, 1)) > 0).astype(np.float64)
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[3], seed=1)
+    cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32, lr=0.5,
+                    seed=0, use_psi=False, he_bits=128, he_packed=True)
+    res = run_vfl(cfg, master, members, mode="thread")
+    h = [e["loss"] for e in res["master"]["history"]]
+    assert h[-1] < h[0]
+
+
+def test_member_falls_back_to_scalar_when_packing_impossible(monkeypatch):
+    """If packed_matvec reports the key can't fit a slot, the member
+    silently degrades to the scalar path and training proceeds."""
+    import repro.core.protocols.logreg as logreg_mod
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import VFLConfig
+    from repro.data.vertical import vertical_partition
+
+    def no_fit(*args, **kwargs):
+        raise ValueError("slot does not fit key")
+    monkeypatch.setattr(logreg_mod.he, "packed_matvec", no_fit)
+
+    rng = np.random.default_rng(3)
+    n, d = 64, 6
+    x = rng.normal(size=(n, d))
+    y = (x @ rng.normal(size=(d, 1)) > 0).astype(np.float64)
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[3], seed=1)
+    cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32, lr=0.5,
+                    seed=0, use_psi=False, he_bits=256, he_packed=True)
+    res = run_vfl(cfg, master, members, mode="thread")
+    h = [e["loss"] for e in res["master"]["history"]]
+    assert h[-1] < h[0]
+    # scalar fallback: one decryption per gradient value
+    assert res["arbiter"]["decrypted_values"] \
+        == res["arbiter"]["recovered_values"]
+
+
+def test_width_derived_from_key_handles_large_keys():
+    """The seed's hardcoded 256-byte width truncated >=2048-bit keys;
+    the derived width must cover n^2 exactly."""
+    pub, _ = _KEYS
+    assert pub.cipher_bytes == (2 * pub.n.bit_length() + 7) // 8
+    big = he.PublicKey((1 << 2047) + 1)         # 2048-bit modulus stand-in
+    assert big.cipher_bytes > 256
+    c_max = big.n_sq - 1
+    back = codec.u8_to_ints(codec.ints_to_u8([c_max], big.cipher_bytes))
+    assert back == [c_max]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: packed vs unpacked training equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["thread"])
+def test_logreg_he_packed_equals_unpacked(mode):
+    import dataclasses
+
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import MasterData, VFLConfig
+    from repro.data.vertical import vertical_partition
+
+    rng = np.random.default_rng(0)
+    n, d = 64, 12
+    x = rng.normal(size=(n, d))
+    y = (x @ rng.normal(size=(d, 1)) > 0).astype(np.float64)
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[8], seed=4)
+    cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32, lr=0.5,
+                    seed=0, use_psi=False, he_bits=256, he_packed=True)
+    packed = run_vfl(cfg, master, members, mode=mode)
+    unpacked = run_vfl(dataclasses.replace(cfg, he_packed=False),
+                       master, members, mode=mode)
+
+    # identical training trajectory within fixed-point tolerance (the
+    # packed path computes the *same integers*, so this is exact)
+    np.testing.assert_allclose(
+        [h["loss"] for h in packed["master"]["history"]],
+        [h["loss"] for h in unpacked["master"]["history"]], atol=1e-6)
+    np.testing.assert_allclose(packed["member0"]["w"],
+                               unpacked["member0"]["w"], atol=1e-6)
+    np.testing.assert_allclose(packed["master"]["w_master"],
+                               unpacked["master"]["w_master"], atol=1e-6)
+
+    # the arbiter decrypted ~K x fewer ciphertexts for the same values
+    assert packed["arbiter"]["recovered_values"] \
+        == unpacked["arbiter"]["recovered_values"]
+    assert packed["arbiter"]["decrypted_values"] \
+        <= unpacked["arbiter"]["decrypted_values"] / 2

@@ -27,8 +27,8 @@ def test_partial_softmax_decode_matches_baseline():
 
         cfg = get_config("glm4-9b").reduced()
         cfg = dataclasses.replace(cfg, n_kv_heads=2, n_heads=4, head_dim=32)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(2, 4)    # AxisType-compat across jax versions
         rules = MeshRules(mesh)
         spec = T.model_spec(cfg)
         params = PRM.init_tree(spec, jax.random.key(0), jnp.float32)
