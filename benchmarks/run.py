@@ -259,6 +259,107 @@ def bench_kernels(quick: bool):
          f"exact={bool((qk == qr).all())}")
 
 
+def _seed_linreg_roles(master, members, cfg):
+    """The pre-lifecycle seed loop, reconstructed: hand-rolled role
+    functions over raw communicators with stringly step tags and no
+    driver ctrl rounds. Kept here as the baseline the driver-overhead
+    row is measured against."""
+    import threading
+
+    from repro.comm.local import ThreadBus
+    from repro.comm.schema import TypedChannel
+    from repro.core.protocols import base
+
+    def master_fn(comm, data):
+        ch = TypedChannel(comm)          # match phase needs typed tags
+        order = base.master_match(ch, data, cfg)
+        y = base._select(data.ids, order, data.y)
+        x = base._select(data.ids, order, data.x)
+        n, items = y.shape
+        comm.send("member0", "setup", {"items": np.array([items])})
+        w = np.zeros((x.shape[1], items))
+        history = []
+        step = 0
+        # time the training loop alone (the lifecycle row compares
+        # against the driver's fit-phase timer, so the windows match),
+        # and do the same loss/history work the seed master did
+        t0 = time.perf_counter()
+        for epoch in range(cfg.epochs):
+            for rows in base.batches(n, cfg, epoch):
+                zb = x[rows] @ w
+                zb += comm.recv("member0", f"z/{step}").tensor("z")
+                r = (zb - y[rows]) / len(rows)
+                comm.send("member0", f"resid/{step}", {"r": r})
+                w -= cfg.lr * (x[rows].T @ r)
+                loss = float(0.5 * np.mean((zb - y[rows]) ** 2))
+                history.append({"step": step, "epoch": epoch,
+                                "loss": loss})
+                step += 1
+        loop_s = time.perf_counter() - t0
+        comm.send("member0", "done", {"ok": np.array([1])})
+        return step, loop_s
+
+    def member_fn(comm, data):
+        ch = TypedChannel(comm)
+        order = base.member_match(ch, data, cfg)
+        x = base._select(data.ids, order, data.x)
+        n = len(order)
+        items = int(comm.recv("master", "setup").tensor("items")[0])
+        w = np.zeros((x.shape[1], items))
+        step = 0
+        for epoch in range(cfg.epochs):
+            for rows in base.batches(n, cfg, epoch):
+                comm.send("master", f"z/{step}", {"z": x[rows] @ w})
+                r = comm.recv("master", f"resid/{step}").tensor("r")
+                w -= cfg.lr * (x[rows].T @ r)
+                step += 1
+        comm.recv("master", "done")
+
+    bus = ThreadBus(["master", "member0"])
+    out = {}
+
+    def run_master():
+        out["steps"], out["loop_s"] = master_fn(
+            bus.communicator("master"), master)
+    t = threading.Thread(target=run_master)
+    t.start()
+    member_fn(bus.communicator("member0"), members[0])
+    t.join()
+    return out["steps"], out["loop_s"]
+
+
+def bench_driver_overhead():
+    """Lifecycle-API cost vs the seed loop: the shared driver adds one
+    small ctrl broadcast per batch + callback dispatch; this row tracks
+    that overhead (steps/sec both ways) from day one."""
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import VFLConfig
+    from repro.data.vertical import vertical_partition
+    rng = np.random.default_rng(0)
+    n, d = 512, 16
+    x = rng.normal(size=(n, d))
+    y = x @ rng.normal(size=(d, 2)) * 0.3
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[6],
+                                         overlap=1.0, seed=1)
+    cfg = VFLConfig(protocol="linreg", epochs=4, batch_size=32, lr=0.05,
+                    use_psi=False)
+
+    steps, dt_seed = _seed_linreg_roles(master, members, cfg)
+    t0 = time.perf_counter()
+    res = run_vfl(cfg, master, members, mode="thread")
+    dt_total = time.perf_counter() - t0
+    dt_fit = res["master"]["phase_s"]["fit"]
+    new_steps = len(res["master"]["history"])
+    assert new_steps == steps, (new_steps, steps)
+    emit("vfl_driver_seed_loop", dt_seed / steps * 1e6,
+         f"steps_per_s={steps / dt_seed:.0f}")
+    emit("vfl_driver_lifecycle", dt_fit / new_steps * 1e6,
+         f"steps_per_s={new_steps / dt_fit:.0f} "
+         f"fit_overhead_x{dt_fit / max(dt_seed, 1e-9):.2f} "
+         f"job_total_s={dt_total:.2f}")
+
+
 def bench_vfl_scaling():
     """Comm volume vs number of member silos (paper: multi-member VFL)."""
     from repro.core.party import run_vfl
@@ -363,6 +464,7 @@ def main() -> None:
     bench_he_packed(args.quick)
     bench_psi()
     bench_kernels(args.quick)
+    bench_driver_overhead()
     bench_vfl_scaling()
     bench_compression()
     bench_serving()

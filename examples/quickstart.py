@@ -1,16 +1,18 @@
-"""Quickstart: the paper's core loop in ~40 lines.
+"""Quickstart: the paper's core loop in ~40 lines, on the lifecycle API.
 
-Builds the SBOL-like two-silo recommendation dataset, runs VFL
-split-learning in local (thread) mode, then re-runs the identical
-protocol over TCP sockets — the seamless mode switch that is
-Stalactite's headline feature.
+Builds the SBOL-like two-silo recommendation dataset, then runs a
+:class:`~repro.core.party.VFLJob` — fit, federated evaluate (members
+answer feature-slice queries; nobody's raw data moves), shutdown — in
+local (thread) mode, and re-runs the identical protocol over TCP
+sockets: the seamless mode switch that is Stalactite's headline
+feature.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.configs.vfl_recsys import VFLRecsysConfig
-from repro.core.party import run_vfl
+from repro.core.party import VFLJob
 from repro.core.protocols.base import MasterData, MemberData, VFLConfig
 from repro.data.synthetic import make_recsys_silos
 
@@ -27,11 +29,14 @@ def main():
                     lr=0.05, seed=0, use_psi=True, embedding_dim=16)
 
     for mode in ("thread", "socket"):
-        res = run_vfl(cfg, master, members, mode=mode)
-        h = res["master"]["history"]
-        stats = res["master"]["comm"]
-        print(f"[{mode:6s}] matched {res['master']['n_common']} users | "
+        with VFLJob(cfg, master, members, mode=mode) as job:
+            fit = job.fit()
+            metrics = job.evaluate()          # predict + rank metrics
+            h = fit["history"]
+            stats = job.shutdown()["master"]["comm"]
+        print(f"[{mode:6s}] matched {fit['n_common']} users | "
               f"loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} | "
+              f"AUC {metrics['auc']:.3f} | "
               f"{stats['sent_messages']} msgs, {stats['sent_bytes']:,} B")
 
 

@@ -3,6 +3,12 @@ like member silo, arbiterless (linreg / split-NN) and arbitered
 (Paillier-HE logreg) experiments, with the paper's logging (payload
 bytes, exchange time, ML metrics) written to benchmarks/results/demo/.
 
+Each experiment is a :class:`~repro.core.party.VFLJob`: after fit, the
+SAME live agents serve a federated predict phase — members answer
+feature-slice queries, the master assembles scores — so the post-
+training AUC comes from the protocol itself, not from an evaluator that
+secretly holds every silo.
+
   PYTHONPATH=src python examples/vfl_recsys_demo.py [--full]
 
 --full uses the published SBOL scale (190k users); default is a reduced
@@ -15,13 +21,9 @@ import pathlib
 import numpy as np
 
 from repro.configs.vfl_recsys import VFLRecsysConfig
-from repro.core.party import run_vfl
+from repro.core.party import VFLJob
 from repro.core.protocols.base import MasterData, MemberData, VFLConfig
-from repro.core.protocols.base import _select
-from repro.core.protocols.split_nn import mlp_apply
 from repro.data.synthetic import make_recsys_silos
-from repro.train.evals import recsys_report
-from repro.train.metrics import MetricsLogger
 
 OUT = pathlib.Path(__file__).resolve().parents[1] \
     / "benchmarks" / "results" / "demo"
@@ -46,54 +48,57 @@ def main():
     # 1. arbiterless VFL linear regression on implicit labels
     cfg = VFLConfig(protocol="linreg", epochs=4, batch_size=128, lr=0.05,
                     seed=0, use_psi=False)
-    res = run_vfl(cfg, master, members, mode=args.mode)
+    with VFLJob(cfg, master, members, mode=args.mode) as job:
+        fit = job.fit()
+        metrics = job.evaluate()
+        res = job.shutdown()
     summary["linreg"] = {
-        "loss_first": res["master"]["history"][0]["loss"],
-        "loss_last": res["master"]["history"][-1]["loss"],
+        "loss_first": fit["history"][0]["loss"],
+        "loss_last": fit["history"][-1]["loss"],
+        **metrics,
         "comm": res["master"]["comm"],
     }
 
-    # 2. split-NN recommender (the paper's demo model family)
+    # 2. split-NN recommender (the paper's demo model family) — rank
+    # quality via the federated predict phase on the live agents
     cfg = VFLConfig(protocol="split_nn", epochs=30, batch_size=128, lr=0.3,
                     seed=0, use_psi=True, embedding_dim=dcfg.embedding_dim,
                     hidden=tuple(dcfg.bottom_dims[-1:]))
-    res = run_vfl(cfg, master, members, mode=args.mode)
-    # rank-quality report: compose the trained split model over the
-    # matched users (the evaluator holds all silos; parties never did)
-    order = res["master"]["order"]
-    u = mlp_apply(res["master"]["bottom"],
-                  _select(master.ids, order, master.x), final_act=True)
-    for j, m in enumerate(members):
-        u = u + mlp_apply(res[f"member{j}"]["params"],
-                          _select(m.ids, order, m.x), final_act=True)
-    scores = np.asarray(mlp_apply(res["master"]["top"], u))
-    labels = _select(master.ids, order, np.asarray(master.y))
-    report = recsys_report(scores, labels, k=5)
+    with VFLJob(cfg, master, members, mode=args.mode) as job:
+        fit = job.fit()
+        report = job.evaluate()           # AUC / precision@5 / ndcg@5
+        res = job.shutdown()
     summary["split_nn"] = {
-        "loss_first": res["master"]["history"][0]["loss"],
-        "loss_last": res["master"]["history"][-1]["loss"],
-        "n_common": res["master"]["n_common"],
+        "loss_first": fit["history"][0]["loss"],
+        "loss_last": fit["history"][-1]["loss"],
+        "n_common": fit["n_common"],
         **report,
+        "phase_s": res["master"]["phase_s"],
         "comm": res["master"]["comm"],
     }
 
-    # 3. arbitered HE logreg on product 0 (binary)
+    # 3. arbitered HE logreg on product 0 (binary); predict needs no HE,
+    # so post-training AUC is one cheap plaintext round
     yb = master.y[:, :1]
     cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32, lr=0.5,
                     seed=0, use_psi=False, he_bits=256)
-    res = run_vfl(cfg, MasterData(master.ids, yb, master.x), members,
-                  mode=args.mode)
+    with VFLJob(cfg, MasterData(master.ids, yb, master.x), members,
+                mode=args.mode) as job:
+        fit = job.fit()
+        metrics = job.evaluate()
+        res = job.shutdown()
     summary["logreg_he"] = {
-        "loss_first": res["master"]["history"][0]["loss"],
-        "loss_last": res["master"]["history"][-1]["loss"],
+        "loss_first": fit["history"][0]["loss"],
+        "loss_last": fit["history"][-1]["loss"],
+        **metrics,
         "arbiter_decryptions": res["arbiter"]["decrypted_values"],
         "comm": res["master"]["comm"],
     }
 
     (OUT / "demo_summary.json").write_text(json.dumps(summary, indent=1))
     for k, v in summary.items():
-        extra = f" | AUC {v['auc']:.3f} ndcg@5 {v['ndcg@5']:.3f}" \
-            if "auc" in v else ""
+        extra = f" | AUC {v['auc']:.3f}" if "auc" in v else ""
+        extra += f" ndcg@5 {v['ndcg@5']:.3f}" if "ndcg@5" in v else ""
         print(f"{k:10s} loss {v['loss_first']:.4f} -> {v['loss_last']:.4f}"
               f" | {v['comm']['sent_bytes']:,} B sent{extra}")
     print(f"written: {OUT}/demo_summary.json")

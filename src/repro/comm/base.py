@@ -40,12 +40,19 @@ class CommStats:
     recv_wait_s: float = 0.0
     send_s: float = 0.0
     per_tag_bytes: Dict[str, int] = field(default_factory=dict)
+    # lifecycle phase the agent is currently in ("match" / "fit" /
+    # "predict" / ...); the driver updates it at phase transitions so
+    # payload accounting splits by phase with zero protocol involvement
+    phase: str = "init"
+    per_phase_bytes: Dict[str, int] = field(default_factory=dict)
 
     def record_send(self, tag: str, nbytes: int, dt: float):
         self.sent_messages += 1
         self.sent_bytes += nbytes
         self.send_s += dt
         self.per_tag_bytes[tag] = self.per_tag_bytes.get(tag, 0) + nbytes
+        self.per_phase_bytes[self.phase] = \
+            self.per_phase_bytes.get(self.phase, 0) + nbytes
 
     def record_recv(self, wait: float):
         self.recv_messages += 1
@@ -59,6 +66,7 @@ class CommStats:
             "recv_wait_s": round(self.recv_wait_s, 4),
             "send_s": round(self.send_s, 4),
             "per_tag_bytes": dict(self.per_tag_bytes),
+            "per_phase_bytes": dict(self.per_phase_bytes),
         }
 
 

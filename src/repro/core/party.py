@@ -1,26 +1,45 @@
-"""Agent roles (PartyMaster / PartyMember / Arbiter) and the execution-
-mode runner.
+"""Agent lifecycle runtime: role objects, the :class:`VFLJob` entry
+point, and the execution-mode plumbing.
 
-``run_vfl(...)`` runs one protocol across all agents in any of the three
-paper modes — "thread" (in-process queues), "process"
-(multiprocessing), "socket" (TCP + safetensors framing) — with identical
-protocol code; mode equivalence is a tested claim (EXPERIMENTS.md
-§Functional). A fourth beyond-paper mode, the TPU mesh step, lives in
-core/vfl_step.py.
+Every agent runs one :class:`~repro.core.protocols.driver.VFLProtocol`
+instance under the shared :class:`~repro.core.protocols.driver.Driver`
+(the single copy of the epoch/batch loop, callbacks, checkpointing and
+the phase handshake — DESIGN.md §6). A protocol is a registered
+subclass with lifecycle hooks; agents resolve it by ``cfg.protocol``
+name (or a ``"module:Class"`` spec for user protocols).
+
+``VFLJob`` keeps the whole federation alive across phases::
+
+    job = VFLJob(cfg, master_data, member_datas, mode="socket")
+    job.fit()                    # training phase (callbacks, checkpoints)
+    scores = job.predict()       # joint inference — no retraining
+    metrics = job.evaluate()     # predict + protocol metrics (e.g. AUC)
+    results = job.shutdown()     # per-role result dicts
+
+``run_vfl(...)`` is the one-shot compatibility wrapper (fit + shutdown)
+and runs in any of the three paper modes — "thread" (in-process
+queues), "process" (multiprocessing), "socket" (TCP + safetensors
+framing) — with identical protocol code; mode equivalence is a tested
+claim (EXPERIMENTS.md §Functional). A fourth beyond-paper mode, the TPU
+mesh step, lives in core/vfl_step.py.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
+import queue
 import threading
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.comm.base import PartyCommunicator
 from repro.comm.local import ThreadBus
-from repro.comm.process import ProcessBus
+from repro.comm.schema import TypedChannel
 from repro.comm.sock import SocketCommunicator, local_addresses
-from repro.core.protocols import PROTOCOLS, VFLConfig
-from repro.core.protocols.base import MasterData, MemberData
+from repro.core.protocols import PROTOCOLS, VFLConfig      # noqa: F401
+from repro.core.protocols.base import (MasterData, MemberData,
+                                       resolve_protocol)
+from repro.core.protocols.driver import Callback, Driver, load_checkpoint
 
 # ensure built-in protocols register
 from repro.core.protocols import linreg as _linreg        # noqa: F401
@@ -28,63 +47,150 @@ from repro.core.protocols import logreg as _logreg        # noqa: F401
 from repro.core.protocols import split_nn as _split_nn    # noqa: F401
 
 
-@dataclass
-class VFLAgent:
-    """Explicit role object (paper Fig. 1). Thin wrapper over the
-    functional protocol layer, for API fidelity with Stalactite."""
-
-    comm: PartyCommunicator
-    cfg: VFLConfig
-
-    def _fn(self, role: str):
-        return PROTOCOLS[self.cfg.protocol][role]
-
-
-class PartyMaster(VFLAgent):
-    def fit(self, data: MasterData) -> Dict[str, Any]:
-        return self._fn("master")(self.comm, data, self.cfg)
-
-
-class PartyMember(VFLAgent):
-    def fit(self, data: MemberData) -> Dict[str, Any]:
-        return self._fn("member")(self.comm, data, self.cfg)
-
-
-class Arbiter(VFLAgent):
-    def serve(self) -> Dict[str, Any]:
-        return self._fn("arbiter")(self.comm, None, self.cfg)
-
-
-# ---------------------------------------------------------------------------
-# runner
-# ---------------------------------------------------------------------------
-
-
 def world_for(cfg: VFLConfig, n_members: int) -> List[str]:
     world = ["master"] + [f"member{i}" for i in range(n_members)]
-    if PROTOCOLS[cfg.protocol]["needs_arbiter"]:
+    if resolve_protocol(cfg.protocol).needs_arbiter:
         world.append("arbiter")
     return world
 
 
-def _role_entry(role: str, comm: PartyCommunicator, cfg: VFLConfig,
-                data, out: Dict[str, Any]):
-    proto = PROTOCOLS[cfg.protocol]
+def _wrap_exc(e: BaseException) -> RuntimeError:
+    """Picklable stand-in carrying the remote traceback text."""
+    tb = "".join(traceback.format_exception(type(e), e, e.__traceback__))
+    return RuntimeError(f"{type(e).__name__}: {e}\n"
+                        f"--- remote traceback ---\n{tb}")
+
+
+# ---------------------------------------------------------------------------
+# explicit role objects (paper Fig. 1) — for deployments where each
+# agent is its own process/host and you hand it a communicator yourself
+# ---------------------------------------------------------------------------
+
+
+class VFLAgent:
+    """One agent: protocol instance + driver over a communicator."""
+
+    role: str = "?"
+
+    def __init__(self, comm: PartyCommunicator, cfg: VFLConfig,
+                 callbacks: Sequence[Callback] = (),
+                 resume_dir: Optional[str] = None):
+        self.comm = comm
+        self.cfg = cfg
+        proto_cls = resolve_protocol(cfg.protocol)
+        proto = proto_cls(cfg, TypedChannel(comm), comm.me)
+        resume = load_checkpoint(resume_dir, comm.me) if resume_dir \
+            else None
+        self.driver = Driver(proto, callbacks=callbacks,
+                             resume_state=resume)
+
+
+class PartyMaster(VFLAgent):
+    """Drives the federation: call ``fit`` / ``predict`` / ``evaluate``
+    in any order, then ``shutdown`` to release the other agents."""
+
+    role = "master"
+
+    def fit(self, data: MasterData, **kw) -> Dict[str, Any]:
+        if self.driver.proto.data is None:
+            self.driver.prepare(data)
+        return self.driver.fit(**kw)
+
+    def predict(self, rows=None, **kw):
+        return self.driver.predict(rows, **kw)
+
+    def evaluate(self, rows=None) -> Dict[str, Any]:
+        return self.driver.evaluate(rows)
+
+    def shutdown(self) -> Dict[str, Any]:
+        self.driver.shutdown_world()
+        self.driver.proto.close()
+        return self.driver.result()
+
+
+class PartyMember(VFLAgent):
+    """Reactive agent: serves the master's phase announcements until
+    shutdown, then returns its result dict."""
+
+    role = "member"
+
+    def serve(self, data: MemberData) -> Dict[str, Any]:
+        try:
+            self.driver.prepare(data)
+            return self.driver.follow()
+        finally:
+            self.driver.proto.close()
+
+
+class Arbiter(VFLAgent):
+    role = "arbiter"
+
+    def serve(self) -> Dict[str, Any]:
+        try:
+            self.driver.prepare(None)
+            return self.driver.follow()
+        finally:
+            self.driver.proto.close()
+
+
+# ---------------------------------------------------------------------------
+# agent entry points
+# ---------------------------------------------------------------------------
+
+
+def _drive_master(driver: Driver, cmd_q, res_q) -> Dict[str, Any]:
+    """Command loop for the master agent: the owning VFLJob feeds
+    (phase, kwargs) pairs; each reply is ("ok", payload) or
+    ("error", wrapped-exception)."""
+    while True:
+        cmd, kw = cmd_q.get()
+        if cmd == "shutdown":
+            driver.shutdown_world()
+            res_q.put(("ok", None))
+            break
+        try:
+            if cmd == "fit":
+                r: Any = driver.fit(**kw)
+            elif cmd == "predict":
+                r = driver.predict(**kw)
+            elif cmd == "evaluate":
+                r = driver.evaluate(**kw)
+            else:
+                raise ValueError(f"unknown job command {cmd!r}")
+        except BaseException as e:
+            res_q.put(("error", _wrap_exc(e)))
+            raise
+        res_q.put(("ok", r))
+    return driver.result()
+
+
+def _agent_entry(role: str, comm: PartyCommunicator, cfg: VFLConfig,
+                 data, out: Dict[str, Any], callbacks=None,
+                 resume_dir=None, cmd_q=None, res_q=None) -> None:
+    proto_cls = resolve_protocol(cfg.protocol)
+    proto = proto_cls(cfg, TypedChannel(comm), role)
+    resume = load_checkpoint(resume_dir, role) if resume_dir else None
+    driver = Driver(proto, callbacks=callbacks or (), resume_state=resume)
     try:
+        driver.prepare(data)
         if role == "master":
-            out[role] = proto["master"](comm, data, cfg)
-        elif role == "arbiter":
-            out[role] = proto["arbiter"](comm, data, cfg)
+            out[role] = _drive_master(driver, cmd_q, res_q)
         else:
-            out[role] = proto["member"](comm, data, cfg)
+            out[role] = driver.follow()
     except BaseException as e:   # propagate to the runner
         out[role] = {"error": e}
+        if role == "master" and res_q is not None:
+            res_q.put(("error", _wrap_exc(e)))
         raise
     finally:
-        comm.close()
+        try:
+            proto.close()
+        finally:
+            comm.close()
 
 
-def _mp_entry(role: str, bus_boxes, world, cfg, data, q):
+def _mp_entry(role, bus_boxes, world, cfg, data, q, callbacks=None,
+              resume_dir=None, cmd_q=None, res_q=None):
     # module-level for picklability (spawn)
     from repro.comm.process import ProcessBus, ProcessCommunicator
     bus = ProcessBus.__new__(ProcessBus)
@@ -92,63 +198,242 @@ def _mp_entry(role: str, bus_boxes, world, cfg, data, q):
     bus.boxes = bus_boxes
     comm = ProcessCommunicator(role, bus)
     out: Dict[str, Any] = {}
-    _role_entry(role, comm, cfg, data, out)
+    try:
+        _agent_entry(role, comm, cfg, data, out, callbacks, resume_dir,
+                     cmd_q, res_q)
+    except BaseException as e:
+        # the error must reach the parent's queue BEFORE this process
+        # dies — otherwise run_vfl blocks its full timeout and reports
+        # queue.Empty instead of the real traceback
+        q.put((role, {"error": _wrap_exc(e)}))
+        raise
     q.put((role, out[role]))
+
+
+# ---------------------------------------------------------------------------
+# the job
+# ---------------------------------------------------------------------------
+
+
+class VFLJob:
+    """A live VFL federation with a phase API.
+
+    Spawns every agent for ``cfg.protocol`` in the requested execution
+    mode and keeps them alive between calls, so inference reuses the
+    trained state — ``fit()`` then ``predict()`` with no retraining and
+    no weight export. ``callbacks`` run on every role (checkpoints stay
+    role-consistent); in process mode they are pickled into the workers,
+    so their in-memory state does not flow back. ``resume_dir`` restores
+    a :class:`~repro.core.protocols.driver.Checkpointer` cut: fit
+    continues mid-epoch from the saved (epoch, batch) position.
+    """
+
+    def __init__(self, cfg: VFLConfig, master_data: MasterData,
+                 member_datas: List[MemberData], mode: str = "thread",
+                 callbacks: Sequence[Callback] = (),
+                 resume_dir: Optional[str] = None):
+        self.cfg = cfg
+        self.mode = mode
+        self.world = world_for(cfg, len(member_datas))
+        datas: Dict[str, Any] = {"master": master_data}
+        for i, md in enumerate(member_datas):
+            datas[f"member{i}"] = md
+        if "arbiter" in self.world:
+            datas["arbiter"] = None
+
+        self._results: Dict[str, Any] = {}
+        self._failed: Optional[BaseException] = None
+        self._closed = False
+        self._threads: List[threading.Thread] = []
+        self._procs: Dict[str, mp.Process] = {}
+        self._q = None                      # process-mode exit results
+
+        if mode in ("thread", "socket"):
+            self._cmd_q: Any = queue.Queue()
+            self._res_q: Any = queue.Queue()
+            if mode == "thread":
+                bus = ThreadBus(self.world)
+                comms = {w: bus.communicator(w) for w in self.world}
+            else:
+                addrs = local_addresses(self.world)
+                comms = {w: SocketCommunicator(w, addrs)
+                         for w in self.world}
+            for w in self.world:
+                is_m = w == "master"
+                t = threading.Thread(
+                    target=_agent_entry,
+                    args=(w, comms[w], cfg, datas[w], self._results,
+                          list(callbacks), resume_dir,
+                          self._cmd_q if is_m else None,
+                          self._res_q if is_m else None),
+                    daemon=True)
+                self._threads.append(t)
+                t.start()
+        elif mode == "process":
+            ctx = mp.get_context("spawn")
+            from repro.comm.process import ProcessBus
+            # the bus must outlive __init__: Process.start() drops its
+            # args reference, and a GC'd mp.Queue unlinks its named
+            # semaphores before slow-importing children rebuild them
+            self._bus = bus = ProcessBus(self.world, ctx)
+            self._q = ctx.Queue()
+            self._cmd_q = ctx.Queue()
+            self._res_q = ctx.Queue()
+            for w in self.world:
+                is_m = w == "master"
+                p = ctx.Process(
+                    target=_mp_entry,
+                    args=(w, bus.boxes, self.world, cfg, datas[w],
+                          self._q, list(callbacks), resume_dir,
+                          self._cmd_q if is_m else None,
+                          self._res_q if is_m else None))
+                # daemonized: an abandoned job (no shutdown) must not
+                # block interpreter exit on multiprocessing's atexit join
+                p.daemon = True
+                self._procs[w] = p
+                p.start()
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+
+    # -- phase API -----------------------------------------------------------
+    # ``timeout`` bounds how long the job waits for the master's reply;
+    # pass float("inf") for unbounded runs (e.g. --full demo scales).
+    def fit(self, timeout: float = 3600.0, **kw) -> Dict[str, Any]:
+        """Run the training phase; returns the master's fit summary
+        (history, n_common, eval_history, early-stop reason)."""
+        return self._call("fit", timeout=timeout, **kw)
+
+    def predict(self, rows=None, timeout: float = 3600.0, **kw):
+        """Joint inference over the matched samples (or a row subset):
+        members answer feature-slice queries, the master assembles and
+        returns the score matrix."""
+        return self._call("predict", timeout=timeout, rows=rows, **kw)
+
+    def evaluate(self, rows=None,
+                 timeout: float = 3600.0) -> Dict[str, Any]:
+        """Predict + the protocol's metrics vs the master's labels."""
+        return self._call("evaluate", timeout=timeout, rows=rows)
+
+    def shutdown(self, timeout: float = 600.0) -> Dict[str, Any]:
+        """End the federation and return per-role result dicts (the
+        same shape the monolithic role functions used to return)."""
+        if self._closed:
+            return self._finish(timeout)
+        self._cmd_q.put(("shutdown", {}))
+        self._wait_reply(timeout)
+        self._closed = True
+        return self._finish(timeout)
+
+    def __enter__(self) -> "VFLJob":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._failed is None and not self._closed:
+            self.shutdown()
+
+    # -- plumbing ------------------------------------------------------------
+    def _call(self, cmd: str, timeout: float = 3600.0, **kw):
+        if self._failed is not None:
+            raise RuntimeError("job already failed") from self._failed
+        if self._closed:
+            raise RuntimeError(f"job already shut down; cannot {cmd}")
+        self._cmd_q.put((cmd, kw))
+        status, payload = self._wait_reply(timeout)
+        if status == "error":
+            self._fail("master", payload)
+        return payload
+
+    def _wait_reply(self, timeout: float = 600.0):
+        """Wait for the master's reply while watching every agent for
+        failure — a crashed member surfaces its real traceback here
+        instead of stalling the job until the comm timeout."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self._res_q.get(timeout=0.2)
+            except queue.Empty:
+                err = self._peek_agent_error()
+                if err is not None:
+                    self._fail(*err)
+                if time.monotonic() > deadline:
+                    self._abort()
+                    raise TimeoutError("master agent did not reply")
+
+    def _peek_agent_error(self):
+        if self._q is not None:           # process mode: drain exits
+            while True:
+                try:
+                    role, res = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                self._results[role] = res
+        for role, res in list(self._results.items()):
+            if isinstance(res, dict) and isinstance(res.get("error"),
+                                                    BaseException):
+                return role, res["error"]
+        # a worker that died before it could even post (e.g. killed, or
+        # crashed during interpreter spawn) would otherwise stall the
+        # job until the comm timeout
+        for role, p in self._procs.items():
+            if role not in self._results and p.exitcode not in (None, 0):
+                return role, RuntimeError(
+                    f"agent process died with exit code {p.exitcode} "
+                    f"before reporting a result")
+        return None
+
+    def _fail(self, role: str, err: BaseException):
+        self._failed = err
+        self._abort()
+        raise RuntimeError(f"agent {role} failed") from err
+
+    def _abort(self) -> None:
+        self._closed = True
+        for p in self._procs.values():
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs.values():
+            p.join(timeout=10)
+
+    def _finish(self, timeout: float) -> Dict[str, Any]:
+        if self.mode == "process":
+            deadline = time.monotonic() + timeout
+            while len(self._results) < len(self.world) \
+                    and time.monotonic() < deadline:
+                try:
+                    role, res = self._q.get(timeout=1.0)
+                    self._results[role] = res
+                except queue.Empty:
+                    if not any(p.is_alive()
+                               for p in self._procs.values()):
+                        break
+            for p in self._procs.values():
+                p.join(timeout=60)
+        else:
+            for t in self._threads:
+                t.join(timeout=timeout)
+        for role, res in self._results.items():
+            if isinstance(res, dict) and isinstance(res.get("error"),
+                                                    BaseException):
+                raise RuntimeError(f"agent {role} failed") \
+                    from res["error"]
+        missing = [w for w in self.world if w not in self._results]
+        if missing:
+            raise RuntimeError(f"agents did not finish: {missing}")
+        return dict(self._results)
 
 
 def run_vfl(cfg: VFLConfig, master_data: MasterData,
             member_datas: List[MemberData], mode: str = "thread",
-            ) -> Dict[str, Any]:
-    """Run a full VFL job (matching + training) in the given mode."""
-    world = world_for(cfg, len(member_datas))
-    datas: Dict[str, Any] = {"master": master_data}
-    for i, md in enumerate(member_datas):
-        datas[f"member{i}"] = md
-    if "arbiter" in world:
-        datas["arbiter"] = None
+            callbacks: Sequence[Callback] = (),
+            resume_dir: Optional[str] = None) -> Dict[str, Any]:
+    """One-shot job (matching + training + teardown) in the given mode.
 
-    results: Dict[str, Any] = {}
-    if mode == "thread":
-        bus = ThreadBus(world)
-        threads = [threading.Thread(
-            target=_role_entry,
-            args=(w, bus.communicator(w), cfg, datas[w], results))
-            for w in world]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(timeout=600)
-    elif mode == "socket":
-        addrs = local_addresses(world)
-        comms = {w: SocketCommunicator(w, addrs) for w in world}
-        threads = [threading.Thread(
-            target=_role_entry, args=(w, comms[w], cfg, datas[w], results))
-            for w in world]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(timeout=600)
-    elif mode == "process":
-        ctx = mp.get_context("spawn")
-        bus = ProcessBus(world, ctx)
-        q = ctx.Queue()
-        procs = [ctx.Process(target=_mp_entry,
-                             args=(w, bus.boxes, world, cfg, datas[w], q))
-                 for w in world]
-        for p in procs:
-            p.start()
-        for _ in world:
-            role, res = q.get(timeout=600)
-            results[role] = res
-        for p in procs:
-            p.join(timeout=60)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    for role, res in results.items():
-        if isinstance(res, dict) and isinstance(res.get("error"),
-                                                BaseException):
-            raise RuntimeError(f"agent {role} failed") from res["error"]
-    missing = [w for w in world if w not in results]
-    if missing:
-        raise RuntimeError(f"agents did not finish: {missing}")
-    return results
+    Compatibility wrapper over :class:`VFLJob` — returns the per-role
+    result dicts the old ``(master_fn, member_fn, arbiter_fn)`` runner
+    produced. Use VFLJob directly when you need predict/evaluate or
+    multiple phases on live agents.
+    """
+    job = VFLJob(cfg, master_data, member_datas, mode=mode,
+                 callbacks=callbacks, resume_dir=resume_dir)
+    job.fit()
+    return job.shutdown()

@@ -1,1 +1,6 @@
-from repro.core.protocols.base import VFLConfig, PROTOCOLS  # noqa: F401
+from repro.core.protocols.base import (PROTOCOLS, VFLConfig,    # noqa: F401
+                                       register, resolve_protocol)
+from repro.core.protocols.driver import (Callback, Checkpointer,  # noqa: F401
+                                         Driver, EarlyStopping,
+                                         EvalEveryEpoch, MetricsStream,
+                                         StopAtStep, VFLProtocol)

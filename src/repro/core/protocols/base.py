@@ -1,21 +1,26 @@
 """Protocol layer scaffolding: config, data containers, the matching
-phase, and the protocol registry.
+phase, deterministic batching, and the protocol registry.
 
-A protocol is a triple of role functions (master_fn, member_fn,
-arbiter_fn-or-None), each taking (comm, data, cfg) and speaking only
-through the PartyCommunicator — never touching another party's raw data.
-The same functions run unchanged in thread / process / socket / mesh
-modes (the paper's seamless-switching claim, validated by tests).
+A protocol is a subclass of :class:`~repro.core.protocols.driver.
+VFLProtocol` — lifecycle hooks (``match`` / ``setup`` /
+``on_batch_master`` / ``on_batch_member`` / ``arbiter_round`` /
+``predict_*`` / ``finalize``) driven by the shared training driver.
+Hooks speak only through the typed channel — never touching another
+party's raw data — and the same class runs unchanged in thread /
+process / socket modes (the paper's seamless-switching claim, validated
+by tests against recorded seed traces).
 """
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+import importlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
-from repro.comm.base import PartyCommunicator
+from repro.comm import schema
+from repro.comm.schema import Field, TypedChannel
 from repro.core import psi
 
 
@@ -36,6 +41,10 @@ class VFLConfig:
     hidden: Tuple[int, ...] = (32,)
     use_psi: bool = True          # DH-PSI vs salted-hash matching
     record_every: int = 1
+    # keep the final short batch of each epoch (True reproduces the old
+    # silent tail-drop; every party derives the tail identically either
+    # way, so modes always agree on batch boundaries)
+    drop_last: bool = False
     # int8-compress split-NN activation/gradient exchanges (4x payload
     # reduction; error feedback keeps training unbiased). Beyond-paper.
     compress: bool = False
@@ -70,19 +79,31 @@ def _select(ids: Sequence[str], order: Sequence[str], arr: np.ndarray
 # phase 1: record matching
 # ---------------------------------------------------------------------------
 
+schema.message("psi/a_blinded", {"v": Field("uint8", 2)},
+               doc="master ids blinded with the master's DH secret")
+schema.message("psi/a_double", {"v": Field("uint8", 2)},
+               doc="master's blinded ids re-blinded by a member")
+schema.message("psi/b_blinded", {"v": Field("uint8", 2)},
+               doc="member ids blinded with the member's DH secret")
+schema.message("match/salt", {"salt": Field("bytes", 1)},
+               doc="shared salt for hash-based matching")
+schema.message("match/hashes", {"h": Field("uint8", 2)},
+               doc="member's salted id digests")
+schema.message("match/order", {"ids": Field("bytes", 1)},
+               doc="agreed sample order (sorted common ids)")
 
-def master_match(comm: PartyCommunicator, data: MasterData,
+
+def master_match(ch: TypedChannel, data: MasterData,
                  cfg: VFLConfig) -> List[str]:
     """Master drives ID matching; returns the agreed sample order."""
     common = set(data.ids)
     if cfg.use_psi:
         me = psi.DHPsi()
         blinded = me.blind(data.ids)
-        for m in comm.members:
-            comm.send(m, "psi/a_blinded",
-                      {"v": _ints_to_arr(blinded)})
-            double_a = comm.recv(m, "psi/a_double").tensor("v")
-            b_blinded = comm.recv(m, "psi/b_blinded").tensor("v")
+        for m in ch.members:
+            ch.send(m, "psi/a_blinded", {"v": _ints_to_arr(blinded)})
+            double_a = ch.recv(m, "psi/a_double").tensor("v")
+            b_blinded = ch.recv(m, "psi/b_blinded").tensor("v")
             double_b = {int(x) for x in
                         _arr_to_ints(_ints_to_arr(me.blind_again(
                             _arr_to_ints(b_blinded))))}
@@ -91,9 +112,9 @@ def master_match(comm: PartyCommunicator, data: MasterData,
             common &= set(mine)
     else:
         salt = hashlib.sha256(str(cfg.seed).encode()).hexdigest()
-        for m in comm.members:
-            comm.send(m, "match/salt", {"salt": _str_arr(salt)})
-            theirs = comm.recv(m, "match/hashes").tensor("h")
+        for m in ch.members:
+            ch.send(m, "match/salt", {"salt": _str_arr(salt)})
+            theirs = ch.recv(m, "match/hashes").tensor("h")
             their_set = {bytes(bytearray(h)) for h in theirs}
             mine = [i for i in data.ids
                     if hashlib.sha256((salt + i).encode()).digest()
@@ -101,28 +122,28 @@ def master_match(comm: PartyCommunicator, data: MasterData,
             common &= set(mine)
     order = sorted(common)
     payload = {"ids": np.array([i.encode() for i in order], dtype="S64")}
-    for m in comm.members:
-        comm.send(m, "match/order", payload)
+    for m in ch.members:
+        ch.send(m, "match/order", payload)
     return order
 
 
-def member_match(comm: PartyCommunicator, data: MemberData,
+def member_match(ch: TypedChannel, data: MemberData,
                  cfg: VFLConfig) -> List[str]:
     if cfg.use_psi:
         me = psi.DHPsi()
-        a_blinded = comm.recv("master", "psi/a_blinded").tensor("v")
-        comm.send("master", "psi/a_double",
-                  {"v": _ints_to_arr(me.blind_again(_arr_to_ints(a_blinded)))})
-        comm.send("master", "psi/b_blinded",
-                  {"v": _ints_to_arr(me.blind(data.ids))})
+        a_blinded = ch.recv("master", "psi/a_blinded").tensor("v")
+        ch.send("master", "psi/a_double",
+                {"v": _ints_to_arr(me.blind_again(_arr_to_ints(a_blinded)))})
+        ch.send("master", "psi/b_blinded",
+                {"v": _ints_to_arr(me.blind(data.ids))})
     else:
-        salt = _arr_str(comm.recv("master", "match/salt").tensor("salt"))
+        salt = _arr_str(ch.recv("master", "match/salt").tensor("salt"))
         buf = b"".join(hashlib.sha256((salt + i).encode()).digest()
                        for i in data.ids)
         hashes = np.frombuffer(buf, np.uint8).reshape(len(data.ids), 32)
-        comm.send("master", "match/hashes", {"h": hashes})
+        ch.send("master", "match/hashes", {"h": hashes})
     order = [b.decode() for b in
-             comm.recv("master", "match/order").tensor("ids")]
+             ch.recv("master", "match/order").tensor("ids")]
     return order
 
 
@@ -146,22 +167,58 @@ def _arr_str(a: np.ndarray) -> str:
     return bytes(a[0]).decode()
 
 
+# ---------------------------------------------------------------------------
+# deterministic batching (every party derives the same boundaries)
+# ---------------------------------------------------------------------------
+
+
 def batch_order(n: int, cfg: VFLConfig, epoch: int) -> np.ndarray:
     """Deterministic permutation every party derives identically."""
     rng = np.random.default_rng(cfg.seed * 1000 + epoch)
     return rng.permutation(n)
 
 
+def batch_bounds(n: int, cfg: VFLConfig) -> List[Tuple[int, int]]:
+    """(lo, hi) slice bounds into the epoch permutation. The tail batch
+    (up to batch_size-1 samples) is kept unless ``cfg.drop_last`` — the
+    seed code silently dropped it, so those samples were never trained.
+    """
+    bs = cfg.batch_size
+    bounds = [(lo, min(lo + bs, n)) for lo in range(0, n, bs)]
+    if cfg.drop_last and bounds and bounds[-1][1] - bounds[-1][0] < bs:
+        bounds.pop()
+    return bounds
+
+
 def batches(n: int, cfg: VFLConfig, epoch: int):
     perm = batch_order(n, cfg, epoch)
-    bs = cfg.batch_size
-    for i in range(0, n - bs + 1, bs):
-        yield perm[i:i + bs]
+    for lo, hi in batch_bounds(n, cfg):
+        yield perm[lo:hi]
 
 
-PROTOCOLS: Dict[str, Dict[str, object]] = {}
+# ---------------------------------------------------------------------------
+# protocol registry
+# ---------------------------------------------------------------------------
+
+PROTOCOLS: Dict[str, Type] = {}      # name -> VFLProtocol subclass
 
 
-def register(name: str, master, member, arbiter=None, needs_arbiter=False):
-    PROTOCOLS[name] = {"master": master, "member": member,
-                       "arbiter": arbiter, "needs_arbiter": needs_arbiter}
+def register(cls) -> type:
+    """Register a VFLProtocol subclass under ``cls.name`` (decorator)."""
+    PROTOCOLS[cls.name] = cls
+    return cls
+
+
+def resolve_protocol(name: str) -> Type:
+    """Look up a protocol class by registry name, or import one given a
+    ``"module:ClassName"`` spec (lets spawned worker processes resolve
+    user-defined protocols that were never imported in their parent)."""
+    if name in PROTOCOLS:
+        return PROTOCOLS[name]
+    if ":" in name:
+        modname, clsname = name.split(":", 1)
+        cls = getattr(importlib.import_module(modname), clsname)
+        PROTOCOLS.setdefault(name, cls)
+        return cls
+    raise KeyError(f"unknown protocol {name!r} "
+                   f"(registered: {sorted(PROTOCOLS)})")

@@ -1,0 +1,531 @@
+"""Lifecycle protocol API + the shared training driver.
+
+The seed shipped protocols as monolithic ``(master_fn, member_fn,
+arbiter_fn)`` triples that each hand-rolled matching, the epoch/batch
+loop, history recording, and the shutdown handshake — ~150 lines of
+scaffolding per protocol, with no way to run inference, eval
+mid-training, or checkpoint. This module splits the two layers the
+VFL-survey literature says belong apart:
+
+* **algorithm layer** — :class:`VFLProtocol`: a protocol subclasses it
+  and fills in role hooks (``setup``, ``on_batch_master`` /
+  ``on_batch_member`` / ``arbiter_round``, ``predict_master`` /
+  ``predict_member``, ``finalize``). A new protocol is ~40 lines of
+  math, not ~180 of loop plumbing.
+
+* **coordination layer** — :class:`Driver`: ONE copy of the epoch/batch
+  loop, deterministic batching, per-round callbacks (eval, checkpoint,
+  early-stop, metrics streaming), per-phase wall timings
+  (CommStats-style), the predict/serve phase, and the done/shutdown
+  handshake. The master's driver announces each round over typed
+  ``ctrl/*`` messages; member and arbiter drivers are reactive, so the
+  master can stop early, interleave eval rounds, or resume mid-epoch
+  without any protocol-level agreement on loop bounds.
+
+Phase machine (one ``ctrl/phase`` per transition, master-announced)::
+
+    match ──> setup ──> [ FIT rounds ]* ──> [ PREDICT rounds ]* ──> shutdown
+                          ctrl/step RUN        ctrl/step EVAL
+                          (epoch, lo, hi)      + predict/rows
+
+``ctrl/step`` carries (op, epoch, lo, hi); every party reconstructs the
+batch rows from the shared deterministic permutation, so the wire never
+moves sample indices during training — only during predict, where the
+query rows are explicit.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.comm import schema
+from repro.comm.schema import Field, TypedChannel
+from repro.core.protocols.base import (VFLConfig, batch_bounds, batch_order,
+                                       master_match, member_match)
+
+# ctrl/phase ops
+PHASE_SHUTDOWN = 0
+PHASE_FIT = 1
+PHASE_PREDICT = 2
+
+# ctrl/step ops
+OP_END = 0
+OP_RUN = 1
+OP_EVAL = 2
+
+schema.message("ctrl/phase", {"op": Field("int64", 1)}, stepped=True,
+               doc="master announces the next lifecycle phase")
+schema.message("ctrl/step",
+               {"op": Field("int64", 1), "epoch": Field("int64", 1),
+                "lo": Field("int64", 1), "hi": Field("int64", 1)},
+               stepped=True,
+               doc="one driver round: train batch / eval chunk / end")
+schema.message("predict/rows", {"rows": Field("int64", 1)}, stepped=True,
+               doc="explicit query rows (indices into the matched order)")
+
+
+class VFLProtocol:
+    """Base class for VFL protocols: algorithm hooks only.
+
+    One instance exists per agent; ``self.role`` says which hooks the
+    driver will call. State set up in ``setup`` (weight slices, selected
+    feature matrices) lives on ``self`` and is what ``state_dict`` /
+    ``load_state_dict`` checkpoint.
+    """
+
+    name: str = "?"
+    needs_arbiter: bool = False
+
+    def __init__(self, cfg: VFLConfig, ch: TypedChannel, role: str):
+        self.cfg = cfg
+        self.ch = ch
+        self.role = role
+        self.data: Any = None          # MasterData / MemberData / None
+        self.order: Optional[List[str]] = None
+
+    @property
+    def is_master(self) -> bool:
+        return self.role == "master"
+
+    @property
+    def is_member(self) -> bool:
+        return self.role.startswith("member")
+
+    @property
+    def is_arbiter(self) -> bool:
+        return self.role == "arbiter"
+
+    # -- lifecycle hooks (override what the protocol needs) ------------------
+    def match(self) -> Optional[List[str]]:
+        """ID matching; default is the shared PSI / salted-hash phase."""
+        if self.is_master:
+            return master_match(self.ch, self.data, self.cfg)
+        if self.is_member:
+            return member_match(self.ch, self.data, self.cfg)
+        return None
+
+    def setup(self) -> None:
+        """Post-match initialization (select rows, init weights, exchange
+        dimensions / keys). Runs again on resume — training state that
+        must survive belongs in ``state_dict``."""
+
+    def on_batch_master(self, rows: np.ndarray, step: int) -> float:
+        """One training round on the master; returns the batch loss."""
+        raise NotImplementedError
+
+    def on_batch_member(self, rows: np.ndarray, step: int) -> None:
+        raise NotImplementedError
+
+    def arbiter_round(self, step: int) -> None:
+        """One arbiter service round (e.g. decrypt-and-return)."""
+
+    def predict_master(self, rows: np.ndarray) -> np.ndarray:
+        """Assemble joint scores for ``rows`` of the matched order."""
+        raise NotImplementedError
+
+    def predict_member(self, rows: np.ndarray) -> None:
+        """Answer one feature-slice query during predict/eval."""
+        raise NotImplementedError
+
+    def evaluate_master(self, scores: np.ndarray,
+                        rows: np.ndarray) -> Dict[str, float]:
+        """Metrics for predicted ``scores`` vs the master's labels."""
+        return {}
+
+    def finalize(self) -> Dict[str, Any]:
+        """Role-specific result payload (weights, counters)."""
+        return {}
+
+    def close(self) -> None:
+        """Release protocol resources (threads, pools). Always called."""
+
+    # -- checkpoint hooks ----------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# callbacks
+# ---------------------------------------------------------------------------
+
+
+class Callback:
+    """Per-round hooks invoked by the driver (all roles). Master-side
+    callbacks may call ``driver.request_stop()`` / ``driver.predict_now``
+    / ``driver.save_checkpoint()``; member/arbiter drivers invoke the
+    same hooks so e.g. checkpoints stay role-consistent."""
+
+    def on_fit_start(self, driver: "Driver") -> None: ...
+    def on_epoch_start(self, driver: "Driver", epoch: int) -> None: ...
+    def on_batch_end(self, driver: "Driver", step: int, epoch: int,
+                     loss: Optional[float]) -> None: ...
+    def on_epoch_end(self, driver: "Driver", epoch: int) -> None: ...
+    def on_fit_end(self, driver: "Driver") -> None: ...
+
+
+class MetricsStream(Callback):
+    """Streams per-round rows into ``self.rows`` (CommStats-style: step,
+    epoch, loss, cumulative sent bytes, wall time since fit start)."""
+
+    def __init__(self):
+        self.rows: List[Dict[str, Any]] = []
+        self._t0 = 0.0
+
+    def on_fit_start(self, driver):
+        self._t0 = time.perf_counter()
+
+    def on_batch_end(self, driver, step, epoch, loss):
+        if driver.role != "master":
+            return
+        self.rows.append({
+            "step": step, "epoch": epoch, "loss": loss,
+            "sent_bytes": driver.ch.stats.sent_bytes,
+            "wall_s": round(time.perf_counter() - self._t0, 4),
+        })
+
+
+class EarlyStopping(Callback):
+    """Stop when the master's batch loss hasn't improved by
+    ``min_delta`` for ``patience`` consecutive rounds."""
+
+    def __init__(self, patience: int = 10, min_delta: float = 0.0):
+        self.patience = patience
+        self.min_delta = min_delta
+        self.best = float("inf")
+        self.bad = 0
+
+    def on_batch_end(self, driver, step, epoch, loss):
+        if driver.role != "master" or loss is None:
+            return
+        if loss < self.best - self.min_delta:
+            self.best, self.bad = loss, 0
+        else:
+            self.bad += 1
+            if self.bad >= self.patience:
+                driver.request_stop(f"early-stop at step {step} "
+                                    f"(best loss {self.best:.6f})")
+
+
+class StopAtStep(Callback):
+    """Deterministically end fit after ``n`` global steps (testing /
+    budgeted runs)."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def on_batch_end(self, driver, step, epoch, loss):
+        if driver.role == "master" and step + 1 >= self.n:
+            driver.request_stop(f"step budget {self.n} reached")
+
+
+class Checkpointer(Callback):
+    """Writes ``<dir>/<role>.pkl`` every ``every_steps`` rounds; every
+    role checkpoints at the same global step, so a directory is a
+    consistent cut of the whole federation. Resume via
+    ``VFLJob(..., resume_dir=...)``."""
+
+    def __init__(self, directory, every_steps: int = 1):
+        self.directory = str(directory)
+        self.every_steps = every_steps
+
+    def on_batch_end(self, driver, step, epoch, loss):
+        if (step + 1) % self.every_steps == 0:
+            driver.save_checkpoint(self.directory)
+
+
+class EvalEveryEpoch(Callback):
+    """Master-side mid-training evaluation: runs a federated predict
+    pass over the matched set at each epoch end (members answer inside
+    their fit loop via EVAL rounds) and appends the protocol's metrics
+    to ``driver.eval_history``."""
+
+    def __init__(self, every: int = 1, max_rows: Optional[int] = None):
+        self.every = every
+        self.max_rows = max_rows
+
+    def on_epoch_end(self, driver, epoch):
+        if driver.role != "master" or (epoch + 1) % self.every:
+            return
+        n = driver.n if self.max_rows is None else min(driver.n,
+                                                       self.max_rows)
+        rows = np.arange(n)
+        scores = driver.predict_now(rows)
+        metrics = driver.proto.evaluate_master(scores, rows)
+        driver.eval_history.append({"epoch": epoch, **metrics})
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+
+def _step_payload(op: int, epoch: int, lo: int, hi: int):
+    # explicit dtype: bare np.array([int]) is int32 on some platforms,
+    # which would fail the declared-int64 schema check
+    return {"op": np.array([op], np.int64),
+            "epoch": np.array([epoch], np.int64),
+            "lo": np.array([lo], np.int64),
+            "hi": np.array([hi], np.int64)}
+
+
+class Driver:
+    """Shared coordination layer: owns the loop, the protocol owns the
+    math. One driver per agent; the master's is command-driven (via
+    :class:`~repro.core.party.VFLJob`), member/arbiter drivers follow
+    the master's ``ctrl/*`` announcements."""
+
+    def __init__(self, proto: VFLProtocol,
+                 callbacks: Sequence[Callback] = (),
+                 resume_state: Optional[Dict[str, Any]] = None):
+        self.proto = proto
+        self.cfg = proto.cfg
+        self.ch = proto.ch
+        self.role = proto.role
+        self.callbacks = list(callbacks)
+        self.history: List[Dict[str, Any]] = []
+        self.eval_history: List[Dict[str, Any]] = []
+        self.phase_s: Dict[str, float] = {}
+        self.global_step = 0
+        self.n: int = 0
+        self.stopped: Optional[str] = None
+        self._stop: Optional[str] = None
+        self._resume = resume_state
+        self._pos = (0, 0)            # (epoch, next batch index)
+
+    # -- helpers -------------------------------------------------------------
+    @property
+    def _others(self) -> List[str]:
+        extra = ["arbiter"] if "arbiter" in self.ch.world else []
+        return self.ch.members + extra
+
+    def _invoke(self, hook: str, *args) -> None:
+        for cb in self.callbacks:
+            getattr(cb, hook)(self, *args)
+
+    def _timed(self, phase: str, t0: float) -> None:
+        self.phase_s[phase] = round(
+            self.phase_s.get(phase, 0.0) + time.perf_counter() - t0, 4)
+
+    def request_stop(self, reason: str = "requested") -> None:
+        self._stop = reason
+
+    def save_checkpoint(self, directory) -> None:
+        d = Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        state = {"global_step": self.global_step, "pos": self._pos,
+                 "history": list(self.history),
+                 "proto": self.proto.state_dict()}
+        (d / f"{self.role}.pkl").write_bytes(pickle.dumps(state))
+
+    # -- lifecycle entry -----------------------------------------------------
+    def prepare(self, data) -> None:
+        """match + setup (+ checkpoint restore). Runs once per agent."""
+        self.proto.data = data
+        t0 = time.perf_counter()
+        self.ch.stats.phase = "match"
+        self.proto.order = self.proto.match()
+        self._timed("match", t0)
+        self.n = len(self.proto.order) if self.proto.order is not None \
+            else 0
+        t0 = time.perf_counter()
+        self.ch.stats.phase = "setup"
+        self.proto.setup()          # keygen etc. — timed on its own
+        self._timed("setup", t0)
+        if self._resume is not None:
+            self.proto.load_state_dict(self._resume["proto"])
+            self.global_step = self._resume["global_step"]
+            self._pos = tuple(self._resume["pos"])
+            self.history = list(self._resume["history"])
+
+    def result(self) -> Dict[str, Any]:
+        out = {**self.proto.finalize(), "comm": self.ch.stats.as_dict(),
+               "phase_s": dict(self.phase_s)}
+        if self.role == "master":
+            out["history"] = list(self.history)
+            out["n_common"] = self.n
+            if self.stopped:
+                out["stopped"] = self.stopped
+            if self.eval_history:
+                out["eval_history"] = list(self.eval_history)
+        return out
+
+    # -- master side ---------------------------------------------------------
+    def fit(self, epochs: Optional[int] = None) -> Dict[str, Any]:
+        """Run the training phase (master only): announce FIT, drive the
+        epoch/batch loop, broadcast one RUN round per batch, handle
+        callbacks / early stop, then close the phase with END."""
+        assert self.role == "master"
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        epochs = cfg.epochs if epochs is None else epochs
+        self.ch.stats.phase = "fit"
+        self.ch.broadcast("ctrl/phase", {"op": np.array([PHASE_FIT], np.int64)},
+                          targets=self._others)
+        self._stop = None
+        self._invoke("on_fit_start")
+        start_epoch, start_batch = self._pos
+        bounds = batch_bounds(self.n, cfg)
+        for epoch in range(start_epoch, epochs):
+            first = start_batch if epoch == start_epoch else 0
+            if first == 0:
+                self._invoke("on_epoch_start", epoch)
+            perm = batch_order(self.n, cfg, epoch)
+            for b in range(first, len(bounds)):
+                lo, hi = bounds[b]
+                self.ch.broadcast("ctrl/step",
+                                  _step_payload(OP_RUN, epoch, lo, hi),
+                                  targets=self._others)
+                loss = self.proto.on_batch_master(perm[lo:hi],
+                                                  self.global_step)
+                if self.global_step % cfg.record_every == 0:
+                    self.history.append({"step": self.global_step,
+                                         "epoch": epoch, "loss": loss})
+                self.global_step += 1
+                self._pos = (epoch, b + 1)
+                self._invoke("on_batch_end", self.global_step - 1, epoch,
+                             loss)
+                if self._stop:
+                    break
+            if not self._stop:
+                self._pos = (epoch + 1, 0)
+                self._invoke("on_epoch_end", epoch)
+            if self._stop:
+                break
+        self.ch.broadcast("ctrl/step", _step_payload(OP_END, -1, 0, 0),
+                          targets=self._others)
+        self.stopped = self._stop
+        self._invoke("on_fit_end")
+        self._timed("fit", t0)
+        return {"history": list(self.history), "n_common": self.n,
+                "stopped": self.stopped,
+                "eval_history": list(self.eval_history)}
+
+    def predict(self, rows: Optional[np.ndarray] = None,
+                batch_size: Optional[int] = None) -> np.ndarray:
+        """Joint inference phase (master only): members answer
+        feature-slice queries, the master assembles scores. No training
+        state changes."""
+        assert self.role == "master"
+        t0 = time.perf_counter()
+        self.ch.stats.phase = "predict"
+        self.ch.broadcast("ctrl/phase", {"op": np.array([PHASE_PREDICT], np.int64)},
+                          targets=self._others)
+        out = self.predict_now(rows, batch_size)
+        self.ch.broadcast("ctrl/step", _step_payload(OP_END, -1, 0, 0),
+                          targets=self._others)
+        self._timed("predict", t0)
+        return out
+
+    def predict_now(self, rows: Optional[np.ndarray] = None,
+                    batch_size: Optional[int] = None) -> np.ndarray:
+        """Run EVAL rounds inside the *current* phase (used by the
+        standalone predict phase and by mid-fit eval callbacks alike —
+        members handle EVAL steps from within their fit loop)."""
+        rows = np.arange(self.n) if rows is None else \
+            np.asarray(rows, dtype=np.int64)
+        bs = batch_size or self.cfg.batch_size
+        parts = []
+        for lo in range(0, len(rows), bs):
+            sub = rows[lo:lo + bs]
+            self.ch.broadcast(
+                "ctrl/step",
+                _step_payload(OP_EVAL, -1, lo, lo + len(sub)),
+                targets=self._others)
+            self.ch.broadcast("predict/rows", {"rows": sub},
+                              targets=self.ch.members)
+            parts.append(np.asarray(self.proto.predict_master(sub)))
+        return np.concatenate(parts, axis=0) if parts else \
+            np.zeros((0, 1))
+
+    def evaluate(self, rows: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        assert self.role == "master"
+        rows = np.arange(self.n) if rows is None else \
+            np.asarray(rows, dtype=np.int64)
+        scores = self.predict(rows)
+        return self.proto.evaluate_master(scores, rows)
+
+    def shutdown_world(self) -> None:
+        assert self.role == "master"
+        self.ch.broadcast("ctrl/phase", {"op": np.array([PHASE_SHUTDOWN], np.int64)},
+                          targets=self._others)
+
+    # -- member / arbiter side ----------------------------------------------
+    def follow(self, idle_timeout: float = 3600.0) -> Dict[str, Any]:
+        """Reactive phase loop for members and the arbiter: wait for the
+        master's phase announcements until shutdown. The wait between
+        phases is patient (a live job may sit idle between fit and
+        predict far longer than the transports' per-message timeouts);
+        within a phase, round timeouts stay strict."""
+        while True:
+            deadline = time.monotonic() + idle_timeout
+            while True:
+                try:
+                    op = int(self.ch.recv("master",
+                                          "ctrl/phase").tensor("op")[0])
+                    break
+                except (queue.Empty, TimeoutError):
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"{self.role}: no phase announcement within "
+                            f"{idle_timeout}s")
+            if op == PHASE_SHUTDOWN:
+                break
+            t0 = time.perf_counter()
+            if op == PHASE_FIT:
+                self.ch.stats.phase = "fit"
+                self._invoke("on_fit_start")
+                self._follow_steps()
+                self._invoke("on_fit_end")
+                self._timed("fit", t0)
+            elif op == PHASE_PREDICT:
+                self.ch.stats.phase = "predict"
+                self._follow_steps()
+                self._timed("predict", t0)
+            else:
+                raise ValueError(f"{self.role}: unknown phase op {op}")
+        return self.result()
+
+    def _follow_steps(self) -> None:
+        cached_epoch, perm = None, None
+        while True:
+            msg = self.ch.recv("master", "ctrl/step")
+            op = int(msg.tensor("op")[0])
+            if op == OP_END:
+                return
+            epoch = int(msg.tensor("epoch")[0])
+            lo, hi = int(msg.tensor("lo")[0]), int(msg.tensor("hi")[0])
+            if op == OP_RUN:
+                if epoch != cached_epoch:
+                    perm = batch_order(self.n, self.cfg, epoch)
+                    cached_epoch = epoch
+                rows = perm[lo:hi]
+                if self.role == "arbiter":
+                    self.proto.arbiter_round(self.global_step)
+                else:
+                    self.proto.on_batch_member(rows, self.global_step)
+                self.global_step += 1
+                self._pos = (epoch, -1)   # members don't track batch idx
+                self._invoke("on_batch_end", self.global_step - 1, epoch,
+                             None)
+            elif op == OP_EVAL:
+                if self.role != "arbiter":
+                    rows = self.ch.recv("master",
+                                        "predict/rows").tensor("rows")
+                    self.proto.predict_member(np.asarray(rows))
+            else:
+                raise ValueError(f"{self.role}: unknown step op {op}")
+
+
+def load_checkpoint(directory, role: str) -> Optional[Dict[str, Any]]:
+    p = Path(directory) / f"{role}.pkl"
+    if not p.exists():
+        return None
+    return pickle.loads(p.read_bytes())

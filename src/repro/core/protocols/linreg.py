@@ -1,74 +1,96 @@
-"""Arbiterless VFL linear regression (paper §2 protocol layer).
+"""Arbiterless VFL linear regression (paper §2 protocol layer), on the
+lifecycle API.
 
 Per batch: every party computes its partial prediction z_p = X_p w_p and
 sends it to the master; the master (who holds labels and its own feature
 slice) sums partials, computes the residual, and broadcasts it; each
 party updates its own weight slice locally from X_p^T r. No raw features
-ever leave a party.
+ever leave a party. Predict is the forward half alone: members answer
+feature-slice queries with partial scores, the master sums.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
-from repro.comm.base import PartyCommunicator
+from repro.comm import schema
+from repro.comm.schema import Field
 from repro.core.protocols import base
-from repro.core.protocols.base import (MasterData, MemberData, VFLConfig,
-                                       batches, master_match, member_match,
-                                       register)
+from repro.core.protocols.driver import VFLProtocol
+
+schema.message("linreg/setup", {"items": Field("int64", 1)},
+               doc="target width broadcast after matching")
+schema.message("linreg/z", {"z": Field("float64", 2)}, stepped=True,
+               doc="partial predictions for the current batch")
+schema.message("linreg/resid", {"r": Field("float64", 2)}, stepped=True,
+               doc="shared residual (the only training signal members see)")
+schema.message("linreg/pred_z", {"z": Field("float64", 2)}, stepped=True,
+               doc="partial scores for a predict query")
 
 
-def master_fn(comm: PartyCommunicator, data: MasterData,
-              cfg: VFLConfig) -> Dict:
-    order = master_match(comm, data, cfg)
-    y = base._select(data.ids, order, data.y).astype(np.float64)
-    x = base._select(data.ids, order, data.x).astype(np.float64) \
-        if data.x is not None else None
-    n, items = y.shape
-    comm.broadcast("linreg/setup", {"items": np.array([items])},
-                   targets=comm.members)
-    w = np.zeros((x.shape[1], items)) if x is not None else None
-    history: List[Dict] = []
-    step = 0
-    for epoch in range(cfg.epochs):
-        for rows in batches(n, cfg, epoch):
-            zb = np.zeros((len(rows), items))
-            if x is not None:
-                zb += x[rows] @ w
-            for msg in comm.gather(comm.members, f"linreg/z/{step}"):
-                zb += msg.tensor("z")
-            r = (zb - y[rows]) / len(rows)
-            comm.broadcast(f"linreg/resid/{step}", {"r": r},
-                           targets=comm.members)
-            if x is not None:
-                w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
-            loss = float(0.5 * np.mean((zb - y[rows]) ** 2))
-            if step % cfg.record_every == 0:
-                history.append({"step": step, "epoch": epoch, "loss": loss})
-            step += 1
-    comm.broadcast("linreg/done", {"ok": np.array([1])},
-                   targets=comm.members)
-    return {"history": history, "w_master": w, "n_common": n,
-            "comm": comm.stats.as_dict()}
+@base.register
+class LinRegProtocol(VFLProtocol):
+    name = "linreg"
 
+    def setup(self) -> None:
+        ch, d = self.ch, self.data
+        if self.is_master:
+            self.y = base._select(d.ids, self.order, d.y).astype(np.float64)
+            self.x = base._select(d.ids, self.order, d.x).astype(np.float64) \
+                if d.x is not None else None
+            self.items = self.y.shape[1]
+            ch.broadcast("linreg/setup",
+                         {"items": np.array([self.items], np.int64)},
+                         targets=ch.members)
+            self.w = np.zeros((self.x.shape[1], self.items)) \
+                if self.x is not None else None
+        else:
+            self.x = base._select(d.ids, self.order, d.x).astype(np.float64)
+            self.items = int(ch.recv("master",
+                                     "linreg/setup").tensor("items")[0])
+            self.w = np.zeros((self.x.shape[1], self.items))
 
-def member_fn(comm: PartyCommunicator, data: MemberData,
-              cfg: VFLConfig) -> Dict:
-    order = member_match(comm, data, cfg)
-    x = base._select(data.ids, order, data.x).astype(np.float64)
-    n = len(order)
-    items = int(comm.recv("master", "linreg/setup").tensor("items")[0])
-    w = np.zeros((x.shape[1], items))
-    step = 0
-    for epoch in range(cfg.epochs):
-        for rows in batches(n, cfg, epoch):
-            comm.send("master", f"linreg/z/{step}", {"z": x[rows] @ w})
-            r = comm.recv("master", f"linreg/resid/{step}").tensor("r")
-            w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
-            step += 1
-    comm.recv("master", "linreg/done")
-    return {"w": w, "comm": comm.stats.as_dict()}
+    def on_batch_master(self, rows, step) -> float:
+        cfg, ch = self.cfg, self.ch
+        zb = np.zeros((len(rows), self.items))
+        if self.x is not None:
+            zb += self.x[rows] @ self.w
+        for msg in ch.gather(ch.members, "linreg/z"):
+            zb += msg.tensor("z")
+        r = (zb - self.y[rows]) / len(rows)
+        ch.broadcast("linreg/resid", {"r": r}, targets=ch.members)
+        if self.x is not None:
+            self.w -= cfg.lr * (self.x[rows].T @ r + cfg.l2 * self.w)
+        return float(0.5 * np.mean((zb - self.y[rows]) ** 2))
 
+    def on_batch_member(self, rows, step) -> None:
+        cfg, ch = self.cfg, self.ch
+        ch.send("master", "linreg/z", {"z": self.x[rows] @ self.w})
+        r = ch.recv("master", "linreg/resid").tensor("r")
+        self.w -= cfg.lr * (self.x[rows].T @ r + cfg.l2 * self.w)
 
-register("linreg", master_fn, member_fn)
+    # -- predict/serve -------------------------------------------------------
+    def predict_master(self, rows) -> np.ndarray:
+        z = np.zeros((len(rows), self.items))
+        if self.x is not None:
+            z += self.x[rows] @ self.w
+        for msg in self.ch.gather(self.ch.members, "linreg/pred_z"):
+            z += msg.tensor("z")
+        return z
+
+    def predict_member(self, rows) -> None:
+        self.ch.send("master", "linreg/pred_z",
+                     {"z": self.x[rows] @ self.w})
+
+    def evaluate_master(self, scores, rows) -> Dict[str, float]:
+        return {"mse": float(np.mean((scores - self.y[rows]) ** 2))}
+
+    def finalize(self) -> Dict:
+        return {"w_master": self.w} if self.is_master else {"w": self.w}
+
+    def state_dict(self) -> Dict:
+        return {"w": None if self.w is None else self.w.copy()}
+
+    def load_state_dict(self, state) -> None:
+        self.w = None if state["w"] is None else state["w"].copy()

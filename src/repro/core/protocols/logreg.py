@@ -1,6 +1,6 @@
 """Arbitered VFL logistic regression with Paillier HE (paper §2: the
 Arbiter "performs the distribution of encryption keys and calculation of
-the gradients concerning the master and members").
+the gradients concerning the master and members"), on the lifecycle API.
 
 Flow per batch:
 1. parties send partial logits to the master (plaintext — logits are
@@ -19,181 +19,209 @@ Flow per batch:
 
 So: members never see residuals (which leak label information), the
 master never sees member gradients, and the arbiter never sees features.
-Ciphertexts ride as uint8 rows whose width is derived from the key size
-and carried in message metadata (no hardcoded wire widths — 2048-bit
-keys transport unharmed). The master additionally publishes the
-fixed-point bound max|r_i| so members can size slots tightly; that
-single magnitude is the only extra leakage (DESIGN.md §3.6).
+Ciphertext wire widths are derived from the key size, carried in
+metadata, and enforced by the message schema at decode (no hardcoded
+widths — 2048-bit keys transport unharmed). The master additionally
+publishes the fixed-point bound max|r_i| so members can size slots
+tightly; that single magnitude is the only extra leakage (DESIGN.md
+§3.6).
+
+Predict needs no HE at all: partial logits aggregate exactly as in
+training, the master applies the sigmoid, and the arbiter sits the
+phase out.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
-from repro.comm import codec
-from repro.comm.base import PartyCommunicator
+from repro.comm import codec, schema
+from repro.comm.schema import Field
 from repro.core import he
 from repro.core.protocols import base
-from repro.core.protocols.base import (MasterData, MemberData, VFLConfig,
-                                       batches, master_match, member_match,
-                                       register)
+from repro.core.protocols.driver import VFLProtocol
+
+schema.message("he/pubkey",
+               {"n": Field("uint8", 1, width_meta="n_bytes")},
+               doc="arbiter's Paillier modulus, width self-declared")
+schema.message("logreg/setup", {"items": Field("int64", 1)})
+schema.message("logreg/z", {"z": Field("float64", 2)}, stepped=True,
+               doc="partial logits for the current batch")
+schema.message("logreg/enc_resid",
+               {"r": Field("uint8", 2, width_meta="width")}, stepped=True,
+               doc="Enc(residual), one ciphertext row per sample")
+schema.message("logreg/enc_grad",
+               {"g": Field("uint8", 2, width_meta="width")}, stepped=True,
+               doc="member's encrypted gradient (packed or scalar)")
+schema.message("logreg/grad", {"g": Field("float64", 1)}, stepped=True,
+               doc="decrypted gradient, returned to the owner only")
+schema.message("logreg/pred_z", {"z": Field("float64", 2)}, stepped=True,
+               doc="partial logits for a predict query")
 
 
 def _sigmoid(z):
     return 1.0 / (1.0 + np.exp(-z))
 
 
-def _check_width(msg, name: str, width: int) -> None:
-    """Cross-check the metadata-declared big-int width against the
-    tensor's trailing dim — catches peers framing ciphertexts with a
-    different key size before they decode to garbage."""
-    if width and msg.tensor(name).shape[-1] != width:
-        raise ValueError(
-            f"{msg.tag}: ciphertext width {msg.tensor(name).shape[-1]} "
-            f"!= declared {width} (key-size mismatch between parties?)")
+@base.register
+class LogRegHEProtocol(VFLProtocol):
+    name = "logreg_he"
+    needs_arbiter = True
 
+    def setup(self) -> None:
+        cfg, ch = self.cfg, self.ch
+        if self.is_arbiter:
+            self.pub, self.priv = he.keygen(cfg.he_bits)
+            n_arr = np.frombuffer(
+                self.pub.n.to_bytes(self.pub.n_bytes, "big"), np.uint8)
+            ch.broadcast("he/pubkey", {"n": n_arr},
+                         meta={"n_bytes": str(self.pub.n_bytes)})
+            self.decrypted = 0    # Paillier decryption ops (ciphertexts)
+            self.values = 0       # gradient values recovered from them
+            return
+        msg = ch.recv("arbiter", "he/pubkey")
+        self.pub = he.PublicKey(
+            int.from_bytes(msg.tensor("n").tobytes(), "big"))
+        self.width = self.pub.cipher_bytes
+        d = self.data
+        if self.is_master:
+            self.pool = he.RandomnessPool(self.pub)
+            self.pool.start(target=2 * cfg.batch_size)
+            self.y = base._select(d.ids, self.order, d.y).astype(np.float64)
+            self.x = base._select(d.ids, self.order, d.x).astype(np.float64) \
+                if d.x is not None else None
+            self.items = self.y.shape[1]
+            assert self.items == 1, "arbitered logreg: single binary target"
+            ch.broadcast("logreg/setup", {"items": np.array([self.items], np.int64)},
+                         targets=ch.members)
+            self.w = np.zeros((self.x.shape[1], 1)) \
+                if self.x is not None else None
+        else:
+            self.pool = he.RandomnessPool(self.pub) if cfg.he_packed \
+                else None
+            self.x = base._select(d.ids, self.order, d.x).astype(np.float64)
+            ch.recv("master", "logreg/setup")
+            self.w = np.zeros((self.x.shape[1], 1))
 
-def _recv_pubkey(comm: PartyCommunicator) -> he.PublicKey:
-    msg = comm.recv("arbiter", "he/pubkey")
-    _check_width(msg, "n", int(msg.meta.get("n_bytes", 0)))
-    return he.PublicKey(int.from_bytes(msg.tensor("n").tobytes(), "big"))
+    def on_batch_master(self, rows, step) -> float:
+        cfg, ch = self.cfg, self.ch
+        zb = np.zeros((len(rows), 1))
+        if self.x is not None:
+            zb += self.x[rows] @ self.w
+        for msg in ch.gather(ch.members, "logreg/z"):
+            zb += msg.tensor("z")
+        p = _sigmoid(zb)
+        r = (p - self.y[rows]) / len(rows)            # (B, 1)
+        r_int = he.encode_fixed(r[:, 0])
+        enc_r = [self.pub.encrypt_int(int(v), rn=self.pool.take())
+                 for v in r_int]
+        ch.broadcast("logreg/enc_resid",
+                     {"r": codec.ints_to_u8(enc_r, self.width)},
+                     targets=ch.members,
+                     meta={"width": str(self.width),
+                           "rb": str(max(1, int(np.abs(r_int).max())))})
+        if self.x is not None:
+            self.w -= cfg.lr * (self.x[rows].T @ r + cfg.l2 * self.w)
+        eps = 1e-9
+        yb = self.y[rows]
+        return float(-np.mean(yb * np.log(p + eps)
+                              + (1 - yb) * np.log(1 - p + eps)))
 
+    def on_batch_member(self, rows, step) -> None:
+        cfg, ch = self.cfg, self.ch
+        ch.send("master", "logreg/z", {"z": self.x[rows] @ self.w})
+        msg = ch.recv("master", "logreg/enc_resid")
+        enc_r = codec.u8_to_ints(msg.tensor("r"))
+        packed = None
+        if cfg.he_packed:
+            x_int = he.encode_fixed(self.x[rows]).reshape(len(rows), -1)
+            rb = int(msg.meta.get("rb", 1 << he.SCALE_BITS))
+            try:
+                packed = he.packed_matvec(self.pub, x_int, enc_r, rb,
+                                          pool=self.pool)
+            except ValueError:
+                # slot wider than the key's plaintext (tiny he_bits /
+                # huge values): degrade to the scalar reference path
+                packed = None
+        if packed is not None:
+            cts, info = packed
+            ch.send("arbiter", "logreg/enc_grad",
+                    {"g": codec.ints_to_u8(cts, self.width)},
+                    meta={"packed": "1", "width": str(self.width),
+                          **{k: str(v) for k, v in info.items()}})
+        else:
+            enc_g = he.matvec_cipher(self.pub, self.x[rows],
+                                     np.array(enc_r, dtype=object))
+            ch.send("arbiter", "logreg/enc_grad",
+                    {"g": codec.ints_to_u8(enc_g, self.width)},
+                    meta={"width": str(self.width)})
+        g = ch.recv("arbiter", "logreg/grad").tensor("g")
+        self.w -= cfg.lr * (g[:, None] + cfg.l2 * self.w)
 
-def arbiter_fn(comm: PartyCommunicator, _data, cfg: VFLConfig) -> Dict:
-    pub, priv = he.keygen(cfg.he_bits)
-    n_arr = np.frombuffer(pub.n.to_bytes(pub.n_bytes, "big"), np.uint8)
-    comm.broadcast("he/pubkey", {"n": n_arr},
-                   meta={"n_bytes": str(pub.n_bytes)})
-    decrypted = 0           # Paillier decryption ops (ciphertexts)
-    values = 0              # gradient values recovered from them
-    while True:
-        msg = comm.recv("master", "arbiter/ctrl")
-        if int(msg.tensor("op")[0]) == 0:       # shutdown
-            break
+    def arbiter_round(self, step) -> None:
         # one decryption round: every member sends an encrypted gradient
-        for m in comm.members:
-            enc = comm.recv(m, "logreg/enc_grad")
-            _check_width(enc, "g", int(enc.meta.get("width", 0)))
+        ch = self.ch
+        for m in ch.members:
+            enc = ch.recv(m, "logreg/enc_grad")
             cts = codec.u8_to_ints(enc.tensor("g"))
             if enc.meta.get("packed") == "1":
-                plains = [priv.decrypt_int(c) for c in cts]
+                plains = [self.priv.decrypt_int(c) for c in cts]
                 flat = he.unpack_matvec(plains,
                                         int(enc.meta["slot_bits"]),
                                         int(enc.meta["k"]),
                                         int(enc.meta["off_bits"]),
                                         int(enc.meta["count"]))
             else:
-                flat = [priv.decrypt_int(c) for c in cts]
+                flat = [self.priv.decrypt_int(c) for c in cts]
             g = he.decode_fixed(flat, (len(flat),),
                                 scale_bits=2 * he.SCALE_BITS)
-            comm.send(m, "logreg/grad", {"g": g})
-            decrypted += len(cts)
-            values += len(flat)
-    return {"decrypted_values": decrypted, "recovered_values": values,
-            "comm": comm.stats.as_dict()}
+            ch.send(m, "logreg/grad", {"g": g})
+            self.decrypted += len(cts)
+            self.values += len(flat)
 
+    # -- predict/serve (plaintext logit aggregation; arbiter idle) ----------
+    def predict_master(self, rows) -> np.ndarray:
+        z = np.zeros((len(rows), 1))
+        if self.x is not None:
+            z += self.x[rows] @ self.w
+        for msg in self.ch.gather(self.ch.members, "logreg/pred_z"):
+            z += msg.tensor("z")
+        return _sigmoid(z)
 
-def master_fn(comm: PartyCommunicator, data: MasterData,
-              cfg: VFLConfig) -> Dict:
-    pub = _recv_pubkey(comm)
-    pool = he.RandomnessPool(pub)
-    try:
-        pool.start(target=2 * cfg.batch_size)
-        order = master_match(comm, data, cfg)
-        y = base._select(data.ids, order, data.y).astype(np.float64)
-        x = base._select(data.ids, order, data.x).astype(np.float64) \
-            if data.x is not None else None
-        n, items = y.shape
-        assert items == 1, "arbitered logreg: single binary target"
-        comm.broadcast("logreg/setup", {"items": np.array([items])},
-                       targets=comm.members)
-        w = np.zeros((x.shape[1], 1)) if x is not None else None
-        history: List[Dict] = []
-        step = 0
-        width = pub.cipher_bytes
-        for epoch in range(cfg.epochs):
-            for rows in batches(n, cfg, epoch):
-                zb = np.zeros((len(rows), 1))
-                if x is not None:
-                    zb += x[rows] @ w
-                for msg in comm.gather(comm.members, f"logreg/z/{step}"):
-                    zb += msg.tensor("z")
-                p = _sigmoid(zb)
-                r = (p - y[rows]) / len(rows)            # (B, 1)
-                r_int = he.encode_fixed(r[:, 0])
-                enc_r = [pub.encrypt_int(int(v), rn=pool.take())
-                         for v in r_int]
-                comm.send("arbiter", "arbiter/ctrl", {"op": np.array([1])})
-                comm.broadcast(
-                    f"logreg/enc_resid/{step}",
-                    {"r": codec.ints_to_u8(enc_r, width)},
-                    targets=comm.members,
-                    meta={"width": str(width),
-                          "rb": str(max(1, int(np.abs(r_int).max())))})
-                if x is not None:
-                    w -= cfg.lr * (x[rows].T @ r + cfg.l2 * w)
-                eps = 1e-9
-                loss = float(-np.mean(y[rows] * np.log(p + eps)
-                                      + (1 - y[rows]) * np.log(1 - p + eps)))
-                if step % cfg.record_every == 0:
-                    history.append({"step": step, "epoch": epoch,
-                                    "loss": loss})
-                step += 1
-        comm.send("arbiter", "arbiter/ctrl", {"op": np.array([0])})
-        comm.broadcast("logreg/done", {"ok": np.array([1])},
-                       targets=comm.members)
-    finally:
-        pool.stop()
-    return {"history": history, "w_master": w, "n_common": n,
-            "comm": comm.stats.as_dict()}
+    def predict_member(self, rows) -> None:
+        self.ch.send("master", "logreg/pred_z",
+                     {"z": self.x[rows] @ self.w})
 
+    def evaluate_master(self, scores, rows) -> Dict[str, float]:
+        from repro.train.evals import auc
+        y = self.y[rows]
+        eps = 1e-9
+        logloss = float(-np.mean(y * np.log(scores + eps)
+                                 + (1 - y) * np.log(1 - scores + eps)))
+        return {"auc": auc(scores, y), "logloss": logloss}
 
-def member_fn(comm: PartyCommunicator, data: MemberData,
-              cfg: VFLConfig) -> Dict:
-    pub = _recv_pubkey(comm)
-    pool = he.RandomnessPool(pub) if cfg.he_packed else None
-    order = member_match(comm, data, cfg)
-    x = base._select(data.ids, order, data.x).astype(np.float64)
-    n = len(order)
-    comm.recv("master", "logreg/setup")
-    w = np.zeros((x.shape[1], 1))
-    width = pub.cipher_bytes
-    step = 0
-    for epoch in range(cfg.epochs):
-        for rows in batches(n, cfg, epoch):
-            comm.send("master", f"logreg/z/{step}", {"z": x[rows] @ w})
-            msg = comm.recv("master", f"logreg/enc_resid/{step}")
-            _check_width(msg, "r", int(msg.meta.get("width", 0)))
-            enc_r = codec.u8_to_ints(msg.tensor("r"))
-            packed = None
-            if cfg.he_packed:
-                x_int = he.encode_fixed(x[rows]).reshape(len(rows), -1)
-                rb = int(msg.meta.get("rb", 1 << he.SCALE_BITS))
-                try:
-                    packed = he.packed_matvec(pub, x_int, enc_r, rb,
-                                              pool=pool)
-                except ValueError:
-                    # slot wider than the key's plaintext (tiny he_bits /
-                    # huge values): degrade to the scalar reference path
-                    packed = None
-            if packed is not None:
-                cts, info = packed
-                comm.send("arbiter", "logreg/enc_grad",
-                          {"g": codec.ints_to_u8(cts, width)},
-                          meta={"packed": "1", "width": str(width),
-                                **{k: str(v) for k, v in info.items()}})
-            else:
-                enc_g = he.matvec_cipher(pub, x[rows],
-                                         np.array(enc_r, dtype=object))
-                comm.send("arbiter", "logreg/enc_grad",
-                          {"g": codec.ints_to_u8(enc_g, width)},
-                          meta={"width": str(width)})
-            g = comm.recv("arbiter", "logreg/grad").tensor("g")
-            w -= cfg.lr * (g[:, None] + cfg.l2 * w)
-            step += 1
-    comm.recv("master", "logreg/done")
-    return {"w": w, "comm": comm.stats.as_dict()}
+    def finalize(self) -> Dict:
+        if self.is_arbiter:
+            return {"decrypted_values": self.decrypted,
+                    "recovered_values": self.values}
+        if self.is_master:
+            return {"w_master": self.w}
+        return {"w": self.w}
 
+    def close(self) -> None:
+        pool = getattr(self, "pool", None)
+        if pool is not None:
+            pool.stop()
 
-register("logreg_he", master_fn, member_fn, arbiter_fn, needs_arbiter=True)
+    def state_dict(self) -> Dict:
+        if self.is_arbiter:
+            return {"decrypted": self.decrypted, "values": self.values}
+        return {"w": None if self.w is None else self.w.copy()}
+
+    def load_state_dict(self, state) -> None:
+        if self.is_arbiter:
+            self.decrypted = state["decrypted"]
+            self.values = state["values"]
+        else:
+            self.w = None if state["w"] is None else state["w"].copy()

@@ -1,5 +1,6 @@
 """Split-learning VFL protocol (paper §2: "neural networks-based
-algorithms enabled with a split-learning approach").
+algorithms enabled with a split-learning approach"), on the lifecycle
+API.
 
 Members own bottom MLPs over their feature slices; the master owns the
 top model and labels. Per batch:
@@ -10,6 +11,10 @@ top model and labels. Per batch:
 3. master backprops and returns du_p to each member (the only gradient
    signal that crosses the boundary),
 4. members apply their bottom VJP locally.
+
+Predict is the forward half federated end-to-end: members answer
+feature-slice queries with bottom activations, the master composes the
+top model — nobody ever holds another silo's features or parameters.
 
 Everything is jax (jit'd per party), so the same protocol code is also
 what the mesh-mode VFL step shards over pods (core/vfl_step.py).
@@ -23,11 +28,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.base import PartyCommunicator
+from repro.comm import schema
+from repro.comm.schema import Field
 from repro.core.protocols import base
-from repro.core.protocols.base import (MasterData, MemberData, VFLConfig,
-                                       batches, master_match, member_match,
-                                       register)
+from repro.core.protocols.driver import VFLProtocol
+
+# activations/gradients are free-form (fields flip between {u|du} and
+# {q, scale} when int8 exchange compression is on), so only the tag
+# sequencing is schema-managed for these two.
+schema.message("splitnn/u", None, stepped=True,
+               doc="member bottom activations (raw f32 or int8+scale)")
+schema.message("splitnn/du", None, stepped=True,
+               doc="embedding gradient returned to one member")
+schema.message("splitnn/pred_u", {"u": Field("float32", 2)}, stepped=True,
+               doc="bottom activations for a predict query")
 
 
 def mlp_init(key, dims: Tuple[int, ...]) -> List[Dict[str, jax.Array]]:
@@ -85,99 +99,132 @@ def _member_bwd(params, x, du, lr):
     return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
 
 
-def master_fn(comm: PartyCommunicator, data: MasterData,
-              cfg: VFLConfig) -> Dict:
-    order = master_match(comm, data, cfg)
-    y = jnp.asarray(base._select(data.ids, order, data.y), jnp.float32)
-    x = jnp.asarray(base._select(data.ids, order, data.x), jnp.float32)
-    n, items = y.shape
-    e = cfg.embedding_dim
-    key = jax.random.key(cfg.seed)
-    bottom = mlp_init(jax.random.fold_in(key, 0),
-                      (x.shape[1],) + cfg.hidden + (e,))
-    top = mlp_init(jax.random.fold_in(key, 1), (e,) + cfg.hidden + (items,))
-    history: List[Dict] = []
-    step = 0
-    lr = jnp.float32(cfg.lr)
-    from repro.core import compression
-    ef = compression.ErrorFeedback()
-    for epoch in range(cfg.epochs):
-        for rows in batches(n, cfg, epoch):
-            msgs = comm.gather(comm.members, f"splitnn/u/{step}")
-            if cfg.compress:
-                u_members = tuple(
-                    jnp.asarray(compression.unpack(m.payload), jnp.float32)
-                    for m in msgs)
-            else:
-                u_members = tuple(jnp.asarray(m.tensor("u"), jnp.float32)
-                                  for m in msgs)
-            loss, top, bottom, g_u = _master_fwd_bwd(
-                top, bottom, u_members, x[rows], y[rows], lr)
-            for mname, du in zip(comm.members, g_u):
+@base.register
+class SplitNNProtocol(VFLProtocol):
+    name = "split_nn"
+
+    def setup(self) -> None:
+        from repro.core import compression
+        cfg, d = self.cfg, self.data
+        self.ef = compression.ErrorFeedback()
+        self.lr = jnp.float32(cfg.lr)
+        key = jax.random.key(cfg.seed)
+        if self.is_master:
+            self.y = jnp.asarray(
+                base._select(d.ids, self.order, d.y), jnp.float32)
+            self.x = jnp.asarray(
+                base._select(d.ids, self.order, d.x), jnp.float32)
+            e = cfg.embedding_dim
+            items = self.y.shape[1]
+            self.bottom = mlp_init(jax.random.fold_in(key, 0),
+                                   (self.x.shape[1],) + cfg.hidden + (e,))
+            self.top = mlp_init(jax.random.fold_in(key, 1),
+                                (e,) + cfg.hidden + (items,))
+        else:
+            self.x = jnp.asarray(
+                base._select(d.ids, self.order, d.x), jnp.float32)
+            # member index determines its init stream (from its id)
+            midx = int(self.role.replace("member", "")) + 2
+            self.params = mlp_init(
+                jax.random.fold_in(key, midx),
+                (self.x.shape[1],) + cfg.hidden + (cfg.embedding_dim,))
+            self.masker = None
+            # mask-stream namespace for predict queries: every member
+            # sees the same EVAL round sequence, so a shared counter
+            # keeps pairwise masks aligned without colliding with
+            # training-step masks
+            self._pred_step = 1 << 20
+            if cfg.secure_agg:
                 if cfg.compress:
-                    q, scale = ef.compress(mname, np.asarray(du))
-                    comm.send(mname, f"splitnn/du/{step}",
-                              compression.payload(q, scale))
-                else:
-                    comm.send(mname, f"splitnn/du/{step}",
-                              {"du": np.asarray(du)})
-            if step % cfg.record_every == 0:
-                history.append({"step": step, "epoch": epoch,
-                                "loss": float(loss)})
-            step += 1
-    comm.broadcast("splitnn/done", {"ok": np.array([1])},
-                   targets=comm.members)
-    return {"history": history, "n_common": n, "order": order,
-            "top": jax.tree.map(np.asarray, top),
-            "bottom": jax.tree.map(np.asarray, bottom),
-            "comm": comm.stats.as_dict()}
+                    raise ValueError("secure_agg masks do not survive "
+                                     "independent quantization; choose one")
+                from repro.core.secure_agg_protocol import PairwiseMasker
+                self.masker = PairwiseMasker(self.ch.comm, self.role,
+                                             self.ch.members)
 
-
-def member_fn(comm: PartyCommunicator, data: MemberData,
-              cfg: VFLConfig) -> Dict:
-    order = member_match(comm, data, cfg)
-    x = jnp.asarray(base._select(data.ids, order, data.x), jnp.float32)
-    n = len(order)
-    # member index determines its init stream (derived from its id)
-    midx = int(comm.me.replace("member", "")) + 2
-    params = mlp_init(jax.random.fold_in(jax.random.key(cfg.seed), midx),
-                      (x.shape[1],) + cfg.hidden + (cfg.embedding_dim,))
-    step = 0
-    lr = jnp.float32(cfg.lr)
-    from repro.core import compression
-    ef = compression.ErrorFeedback()
-    masker = None
-    if cfg.secure_agg:
+    def on_batch_master(self, rows, step) -> float:
+        from repro.core import compression
+        cfg, ch = self.cfg, self.ch
+        msgs = ch.gather(ch.members, "splitnn/u")
         if cfg.compress:
-            raise ValueError("secure_agg masks do not survive independent "
-                             "quantization; choose one")
-        from repro.core.secure_agg_protocol import PairwiseMasker
-        masker = PairwiseMasker(comm, comm.me, comm.members)
-    for epoch in range(cfg.epochs):
-        for rows in batches(n, cfg, epoch):
-            xb = x[rows]
-            u = _member_fwd(params, xb)
-            if masker is not None:
-                u = jnp.asarray(np.asarray(u)
-                                + masker.mask(step, np.asarray(u).shape))
+            u_members = tuple(
+                jnp.asarray(compression.unpack(m.payload), jnp.float32)
+                for m in msgs)
+        else:
+            u_members = tuple(jnp.asarray(m.tensor("u"), jnp.float32)
+                              for m in msgs)
+        loss, self.top, self.bottom, g_u = _master_fwd_bwd(
+            self.top, self.bottom, u_members, self.x[rows], self.y[rows],
+            self.lr)
+        for mname, du in zip(ch.members, g_u):
             if cfg.compress:
-                q, scale = ef.compress("u", np.asarray(u))
-                comm.send("master", f"splitnn/u/{step}",
-                          compression.payload(q, scale))
-                du = jnp.asarray(compression.unpack(
-                    comm.recv("master", f"splitnn/du/{step}").payload),
-                    jnp.float32)
+                q, scale = self.ef.compress(mname, np.asarray(du))
+                ch.send(mname, "splitnn/du", compression.payload(q, scale))
             else:
-                comm.send("master", f"splitnn/u/{step}",
-                          {"u": np.asarray(u)})
-                du = jnp.asarray(
-                    comm.recv("master", f"splitnn/du/{step}").tensor("du"),
-                    jnp.float32)
-            params = _member_bwd(params, xb, du, lr)
-            step += 1
-    comm.recv("master", "splitnn/done")
-    return {"params": jax.tree.map(np.asarray, params),
-            "comm": comm.stats.as_dict()}
+                ch.send(mname, "splitnn/du", {"du": np.asarray(du)})
+        return float(loss)
 
+    def on_batch_member(self, rows, step) -> None:
+        from repro.core import compression
+        cfg, ch = self.cfg, self.ch
+        xb = self.x[rows]
+        u = _member_fwd(self.params, xb)
+        if self.masker is not None:
+            u = jnp.asarray(np.asarray(u)
+                            + self.masker.mask(step, np.asarray(u).shape))
+        if cfg.compress:
+            q, scale = self.ef.compress("u", np.asarray(u))
+            ch.send("master", "splitnn/u", compression.payload(q, scale))
+            du = jnp.asarray(compression.unpack(
+                ch.recv("master", "splitnn/du").payload), jnp.float32)
+        else:
+            ch.send("master", "splitnn/u", {"u": np.asarray(u)})
+            du = jnp.asarray(
+                ch.recv("master", "splitnn/du").tensor("du"), jnp.float32)
+        self.params = _member_bwd(self.params, xb, du, self.lr)
 
-register("split_nn", master_fn, member_fn)
+    # -- predict/serve -------------------------------------------------------
+    def predict_master(self, rows) -> np.ndarray:
+        u = _member_fwd(self.bottom, self.x[rows])
+        for msg in self.ch.gather(self.ch.members, "splitnn/pred_u"):
+            u = u + jnp.asarray(msg.tensor("u"), jnp.float32)
+        return np.asarray(mlp_apply(self.top, u))
+
+    def predict_member(self, rows) -> None:
+        u = np.asarray(_member_fwd(self.params, self.x[rows]))
+        if self.masker is not None:
+            # predict queries get the same pairwise masking as training
+            # rounds — the master only ever sees the aggregate
+            u = np.asarray(u + self.masker.mask(self._pred_step, u.shape),
+                           np.float32)
+            self._pred_step += 1
+        self.ch.send("master", "splitnn/pred_u", {"u": u})
+
+    def evaluate_master(self, scores, rows) -> Dict[str, float]:
+        from repro.train.evals import recsys_report
+        return recsys_report(np.asarray(scores),
+                             np.asarray(self.y[rows]), k=5)
+
+    def finalize(self) -> Dict:
+        if self.is_master:
+            return {"top": jax.tree.map(np.asarray, self.top),
+                    "bottom": jax.tree.map(np.asarray, self.bottom),
+                    "order": self.order}
+        return {"params": jax.tree.map(np.asarray, self.params)}
+
+    def state_dict(self) -> Dict:
+        if self.is_master:
+            return {"top": jax.tree.map(np.asarray, self.top),
+                    "bottom": jax.tree.map(np.asarray, self.bottom),
+                    "ef": dict(self.ef.residuals)}
+        return {"params": jax.tree.map(np.asarray, self.params),
+                "ef": dict(self.ef.residuals)}
+
+    def load_state_dict(self, state) -> None:
+        as_jax = functools.partial(jax.tree.map, jnp.asarray)
+        if self.is_master:
+            self.top = as_jax(state["top"])
+            self.bottom = as_jax(state["bottom"])
+        else:
+            self.params = as_jax(state["params"])
+        self.ef.residuals = dict(state["ef"])
