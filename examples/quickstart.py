@@ -1,4 +1,4 @@
-"""Quickstart: the paper's core loop in ~40 lines, on the lifecycle API.
+"""Quickstart: the paper's core loop in ~50 lines, on the lifecycle API.
 
 Builds the SBOL-like two-silo recommendation dataset, then runs a
 :class:`~repro.core.party.VFLJob` — fit, federated evaluate (members
@@ -6,6 +6,11 @@ answer feature-slice queries; nobody's raw data moves), shutdown — in
 local (thread) mode, and re-runs the identical protocol over TCP
 sockets: the seamless mode switch that is Stalactite's headline
 feature.
+
+The socket run is repeated with ``pipeline_depth=2`` (DESIGN.md §7):
+the master announces rounds one step ahead, members run their bottom
+forward with gradients at most one step stale, and compute overlaps
+the in-flight exchange — same protocol code, one knob.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -28,16 +33,18 @@ def main():
     cfg = VFLConfig(protocol="split_nn", epochs=3, batch_size=64,
                     lr=0.05, seed=0, use_psi=True, embedding_dim=16)
 
-    for mode in ("thread", "socket"):
-        with VFLJob(cfg, master, members, mode=mode) as job:
+    for mode, depth in (("thread", 1), ("socket", 1), ("socket", 2)):
+        with VFLJob(cfg, master, members, mode=mode,
+                    pipeline_depth=depth) as job:
             fit = job.fit()
             metrics = job.evaluate()          # predict + rank metrics
             h = fit["history"]
             stats = job.shutdown()["master"]["comm"]
-        print(f"[{mode:6s}] matched {fit['n_common']} users | "
+        print(f"[{mode:6s} d={depth}] matched {fit['n_common']} users | "
               f"loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} | "
               f"AUC {metrics['auc']:.3f} | "
-              f"{stats['sent_messages']} msgs, {stats['sent_bytes']:,} B")
+              f"{stats['sent_messages']} msgs, {stats['sent_bytes']:,} B "
+              f"| fit {h[-1]['wall_s']:.2f}s")
 
 
 if __name__ == "__main__":

@@ -5,13 +5,28 @@ send/recv interface whose *implementation* (thread queue, process pipe,
 TCP socket, TPU collective) is swapped without touching protocol code.
 Every send is metered (payload bytes via the safetensors codec, wall
 time) — the paper's "comprehensive logging of payload, exchange time".
+
+Non-blocking engine (DESIGN.md §7): every communicator owns one
+background sender thread draining a FIFO queue, so ``isend`` returns a
+:class:`SendFuture` immediately — encode happens on the caller thread
+(the payload is snapshotted, safe to mutate afterwards), the wire write
+happens off it. The blocking ``send`` is a thin wrapper (``isend`` +
+wait) with a fast path that writes inline when nothing is queued, so
+the synchronous protocols pay no thread handoff. ``irecv`` returns a
+:class:`RecvFuture` that resolves lazily: message *arrival* already
+progresses in the background on every transport (listener threads /
+mailbox queues), so resolving is just the matching wait.
+``CommStats`` splits queued-time (waiting behind earlier sends) from
+wire-time (inside the transport write).
 """
 from __future__ import annotations
 
 import abc
+import queue as queue_mod
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -39,6 +54,12 @@ class CommStats:
     recv_messages: int = 0
     recv_wait_s: float = 0.0
     send_s: float = 0.0
+    # async-engine split: time a message sat behind earlier sends in the
+    # outbound queue vs time inside the transport write itself. For the
+    # blocking fast path queued_s is ~0 and wire_s ≈ send_s.
+    queued_s: float = 0.0
+    wire_s: float = 0.0
+    async_sends: int = 0
     per_tag_bytes: Dict[str, int] = field(default_factory=dict)
     # lifecycle phase the agent is currently in ("match" / "fit" /
     # "predict" / ...); the driver updates it at phase transitions so
@@ -54,6 +75,14 @@ class CommStats:
         self.per_phase_bytes[self.phase] = \
             self.per_phase_bytes.get(self.phase, 0) + nbytes
 
+    def record_wire(self, queued: float, wire: float, was_async: bool):
+        # called under the communicator's send lock (sender thread or
+        # the inline fast path), so += updates never interleave
+        self.queued_s += queued
+        self.wire_s += wire
+        if was_async:
+            self.async_sends += 1
+
     def record_recv(self, wait: float):
         self.recv_messages += 1
         self.recv_wait_s += wait
@@ -65,9 +94,72 @@ class CommStats:
             "recv_messages": self.recv_messages,
             "recv_wait_s": round(self.recv_wait_s, 4),
             "send_s": round(self.send_s, 4),
+            "queued_s": round(self.queued_s, 4),
+            "wire_s": round(self.wire_s, 4),
+            "async_sends": self.async_sends,
             "per_tag_bytes": dict(self.per_tag_bytes),
             "per_phase_bytes": dict(self.per_phase_bytes),
         }
+
+
+class SendFuture:
+    """Completion handle for one outbound message.
+
+    Resolves once the transport write finished (thread/process: queue
+    put; socket: ``sendall`` returned). ``result`` re-raises the
+    transport error, if any.
+    """
+
+    def __init__(self, msg: Message):
+        self.msg = msg
+        self._done = threading.Event()
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> None:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"send of {self.msg.tag!r} to {self.msg.recipient!r} "
+                f"did not complete within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+
+    # -- engine side ---------------------------------------------------------
+    def _resolve(self, exc: Optional[BaseException] = None) -> None:
+        self._exc = exc
+        self._done.set()
+
+
+class RecvFuture:
+    """Deferred receive: arrival progresses in the background (listener
+    threads / mailboxes); ``result`` performs the matching wait. ``done``
+    peeks without blocking."""
+
+    def __init__(self, resolve: Callable[[Optional[float]], Message],
+                 peek: Callable[[], bool]):
+        self._resolve = resolve
+        self._peek = peek
+        self._msg: Optional[Message] = None
+
+    def done(self) -> bool:
+        return self._msg is not None or self._peek()
+
+    def result(self, timeout: Optional[float] = None) -> Message:
+        if self._msg is None:
+            self._msg = self._resolve(timeout)
+        return self._msg
+
+
+class _SendItem:
+    __slots__ = ("msg", "raw", "future", "t_enq")
+
+    def __init__(self, msg: Message, raw: bytes, future: SendFuture):
+        self.msg = msg
+        self.raw = raw
+        self.future = future
+        self.t_enq = time.perf_counter()
 
 
 class PartyCommunicator(abc.ABC):
@@ -76,10 +168,24 @@ class PartyCommunicator(abc.ABC):
     ``world`` lists every agent id ("master", "member0", ..., "arbiter").
     """
 
-    def __init__(self, me: str, world: Sequence[str]):
+    def __init__(self, me: str, world: Sequence[str],
+                 timeout: float = 120.0):
         self.me = me
         self.world = list(world)
         self.stats = CommStats()
+        self._timeout = timeout
+        # async sender engine: FIFO queue + lazily started drain thread.
+        # _submitted/_completed (guarded by _send_lock) let the blocking
+        # fast path prove nothing is queued OR in flight before writing
+        # inline, which preserves per-transport FIFO order.
+        self._sendq: "queue_mod.Queue[Optional[_SendItem]]" = \
+            queue_mod.Queue()
+        self._send_lock = threading.Lock()
+        self._send_done = threading.Condition(self._send_lock)
+        self._submitted = 0
+        self._completed = 0
+        self._sender: Optional[threading.Thread] = None
+        self._send_exc: Optional[BaseException] = None
 
     # -- implementation hooks ------------------------------------------------
     @abc.abstractmethod
@@ -87,42 +193,175 @@ class PartyCommunicator(abc.ABC):
         ...
 
     @abc.abstractmethod
-    def _recv(self, frm: str, tag: str) -> Message:
-        ...
+    def _recv_any(self, frm: str, tags: Sequence[str],
+                  timeout: Optional[float] = None) -> Message:
+        """Block until a message from ``frm`` with any of ``tags``
+        arrives; return it (earliest-arrived wins on ties)."""
+
+    def _peek(self, frm: str, tags: Sequence[str]) -> bool:
+        """Non-blocking: is a matching message already delivered?"""
+        return False                     # pragma: no cover - overridden
+
+    def _recv(self, frm: str, tag: str,
+              timeout: Optional[float] = None) -> Message:
+        return self._recv_any(frm, (tag,), timeout)
+
+    # -- sender engine -------------------------------------------------------
+    def _sender_loop(self) -> None:
+        while True:
+            item = self._sendq.get()
+            if item is None:
+                return
+            with self._send_lock:
+                # after a write error the wire may be mid-frame: never
+                # write again — fail queued sends fast instead of
+                # corrupting the length-prefixed stream
+                if self._send_exc is not None:
+                    item.future._resolve(self._send_exc)
+                    self._completed += 1
+                    self._send_done.notify_all()
+                    continue
+                t0 = time.perf_counter()
+                try:
+                    self._send(item.msg, item.raw)
+                except BaseException as e:          # noqa: BLE001
+                    self._send_exc = e
+                    item.future._resolve(e)
+                else:
+                    t1 = time.perf_counter()
+                    self.stats.record_wire(t0 - item.t_enq, t1 - t0,
+                                           was_async=True)
+                    item.future._resolve()
+                finally:
+                    self._completed += 1
+                    self._send_done.notify_all()
+
+    def _ensure_sender(self) -> None:
+        if self._sender is None:
+            self._sender = threading.Thread(target=self._sender_loop,
+                                            daemon=True,
+                                            name=f"sender-{self.me}")
+            self._sender.start()
+
+    def _raise_pending_send_error(self) -> None:
+        # sticky by design: after a wire error the stream may be
+        # mid-frame, so the engine never writes again — every further
+        # send on this communicator fails with the original error
+        with self._send_lock:
+            if self._send_exc is not None:
+                raise self._send_exc
 
     # -- public API ----------------------------------------------------------
-    def send(self, to: str, tag: str, payload: Payload,
-             meta: Optional[Dict[str, str]] = None) -> None:
+    def _make(self, to: str, tag: str, payload: Payload,
+              meta: Optional[Dict[str, str]]) -> "tuple[Message, bytes]":
         payload = {k: np.asarray(v) for k, v in payload.items()}
         msg = Message(self.me, to, tag, payload, dict(meta or {}))
-        t0 = time.perf_counter()
         raw = codec.encode(payload, {"sender": self.me, "tag": tag,
                                      **msg.meta})
-        self._send(msg, raw)
-        self.stats.record_send(tag, len(raw), time.perf_counter() - t0)
+        return msg, raw
 
-    def recv(self, frm: str, tag: str) -> Message:
+    def isend(self, to: str, tag: str, payload: Payload,
+              meta: Optional[Dict[str, str]] = None) -> SendFuture:
+        """Non-blocking send: encode now (payload snapshot), write on
+        the background sender thread, FIFO with every other send."""
+        self._raise_pending_send_error()
         t0 = time.perf_counter()
-        msg = self._recv(frm, tag)
+        msg, raw = self._make(to, tag, payload, meta)
+        fut = SendFuture(msg)
+        self._ensure_sender()
+        with self._send_lock:
+            self._submitted += 1
+        self._sendq.put(_SendItem(msg, raw, fut))
+        self.stats.record_send(tag, len(raw), time.perf_counter() - t0)
+        return fut
+
+    def send(self, to: str, tag: str, payload: Payload,
+             meta: Optional[Dict[str, str]] = None) -> None:
+        """Blocking send. Fast path: when no async send is queued or in
+        flight, write inline on the caller thread (no handoff)."""
+        self._raise_pending_send_error()
+        t0 = time.perf_counter()
+        msg, raw = self._make(to, tag, payload, meta)
+        with self._send_lock:
+            if self._submitted == self._completed:
+                t1 = time.perf_counter()
+                self._send(msg, raw)
+                self.stats.record_wire(0.0, time.perf_counter() - t1,
+                                       was_async=False)
+                self.stats.record_send(tag, len(raw),
+                                       time.perf_counter() - t0)
+                return
+        # async sends outstanding: join the FIFO behind them
+        fut = SendFuture(msg)
+        with self._send_lock:
+            self._submitted += 1
+        self._sendq.put(_SendItem(msg, raw, fut))
+        self.stats.record_send(tag, len(raw), time.perf_counter() - t0)
+        fut.result(self._timeout)
+
+    def flush_sends(self, timeout: Optional[float] = None) -> None:
+        """Block until every queued send hit the wire."""
+        with self._send_done:
+            ok = self._send_done.wait_for(
+                lambda: self._submitted == self._completed, timeout)
+            if not ok:
+                raise TimeoutError("unflushed sends remain")
+            if self._send_exc is not None:
+                raise self._send_exc
+
+    def recv(self, frm: str, tag: str,
+             timeout: Optional[float] = None) -> Message:
+        t0 = time.perf_counter()
+        msg = self._recv(frm, tag, timeout)
         self.stats.record_recv(time.perf_counter() - t0)
         return msg
 
+    def recv_any(self, frm: str, tags: Sequence[str],
+                 timeout: Optional[float] = None) -> Message:
+        """Blocking wait for the first message from ``frm`` carrying any
+        of ``tags`` (stream-aware receives: data or a coalesced frame)."""
+        t0 = time.perf_counter()
+        msg = self._recv_any(frm, tuple(tags), timeout)
+        self.stats.record_recv(time.perf_counter() - t0)
+        return msg
+
+    def irecv(self, frm: str, tag: str) -> RecvFuture:
+        """Non-blocking receive handle for (frm, tag). Arrival already
+        progresses in the background; ``result()`` is the matching wait
+        and MUST be called from the agent's own thread (transports hold
+        one mailbox per agent)."""
+        def _resolve(timeout: Optional[float]) -> Message:
+            return self.recv(frm, tag, timeout)
+        return RecvFuture(_resolve, lambda: self._peek(frm, (tag,)))
+
     def broadcast(self, tag: str, payload: Payload,
                   targets: Optional[Sequence[str]] = None,
-                  meta: Optional[Dict[str, str]] = None) -> None:
-        for t in (targets if targets is not None else self.world):
-            if t != self.me:
-                self.send(t, tag, payload, meta=meta)
+                  meta: Optional[Dict[str, str]] = None,
+                  wait: bool = True) -> List[SendFuture]:
+        """Send to every target; with ``wait=False`` the writes stay on
+        the sender thread and the returned futures track completion."""
+        futs = [self.isend(t, tag, payload, meta=meta)
+                for t in (targets if targets is not None else self.world)
+                if t != self.me]
+        if wait:
+            for f in futs:
+                f.result(self._timeout)
+        return futs
 
     def gather(self, frm: Sequence[str], tag: str) -> List[Message]:
-        return [self.recv(f, tag) for f in frm]
+        futs = [self.irecv(f, tag) for f in frm]
+        return [f.result(self._timeout) for f in futs]
 
     def scatter(self, tag: str, payloads: Dict[str, Payload]) -> None:
         for to, payload in payloads.items():
             self.send(to, tag, payload)
 
-    def close(self) -> None:      # pragma: no cover - overridden as needed
-        pass
+    def close(self) -> None:
+        """Stop the sender thread after draining queued writes."""
+        if self._sender is not None:
+            self._sendq.put(None)
+            self._sender.join(timeout=10)
+            self._sender = None
 
     @property
     def members(self) -> List[str]:

@@ -3,15 +3,20 @@
 One ``multiprocessing.Queue`` mailbox per agent; messages are the codec
 blobs (bytes pickle cheaply and keep payload accounting identical to the
 other modes). Agent functions must be module-level picklables.
+
+Shares the mailbox drain/reorder logic with the thread transport; the
+async sender engine (isend futures) runs per process, so a member's
+wire writes overlap its jax/HE compute with true parallelism here —
+this is the mode where pipelined VFL escapes the GIL entirely.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
-from collections import defaultdict
+import queue
 from typing import Dict, Sequence, Tuple
 
-from repro.comm import codec
-from repro.comm.base import Message, PartyCommunicator
+from repro.comm.base import Message
+from repro.comm.local import _MailboxCommunicator
 
 
 class ProcessBus:
@@ -20,30 +25,22 @@ class ProcessBus:
         ctx = ctx or mp.get_context("spawn")
         self.boxes: Dict[str, mp.Queue] = {w: ctx.Queue() for w in world}
 
-    def communicator(self, me: str) -> "ProcessCommunicator":
-        return ProcessCommunicator(me, self)
+    def communicator(self, me: str,
+                     timeout: float = 240.0) -> "ProcessCommunicator":
+        return ProcessCommunicator(me, self, timeout=timeout)
 
 
-class ProcessCommunicator(PartyCommunicator):
-    def __init__(self, me: str, bus: ProcessBus):
-        super().__init__(me, bus.world)
+class ProcessCommunicator(_MailboxCommunicator):
+    def __init__(self, me: str, bus: ProcessBus, timeout: float = 240.0):
+        super().__init__(me, bus.world, timeout=timeout)
         self._boxes = bus.boxes
-        self._pending: Dict[Tuple[str, str], list] = defaultdict(list)
-        self._timeout = 240.0
+        self._pending: Dict[Tuple[str, str], list] = {}
 
     def _send(self, msg: Message, raw: bytes) -> None:
         self._boxes[msg.recipient].put(raw)
 
-    def _recv(self, frm: str, tag: str) -> Message:
-        key = (frm, tag)
-        while True:
-            if self._pending[key]:
-                return self._pending[key].pop(0)
-            raw = self._boxes[self.me].get(timeout=self._timeout)
-            payload, meta = codec.decode(raw)
-            sender = meta.pop("sender")
-            mtag = meta.pop("tag")
-            msg = Message(sender, self.me, mtag, payload, meta)
-            if (sender, mtag) == key:
-                return msg
-            self._pending[(sender, mtag)].append(msg)
+    def _box_get(self, timeout: float) -> bytes:
+        try:
+            return self._boxes[self.me].get(timeout=max(timeout, 1e-4))
+        except queue.Empty:
+            raise TimeoutError(f"{self.me}: mailbox empty") from None

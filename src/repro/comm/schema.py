@@ -13,6 +13,19 @@ the receiver re-checks after decode (catches version/key-size skew
 between parties — e.g. a peer framing Paillier ciphertexts with a
 different key width is rejected before it decodes to garbage).
 
+Stream awareness (DESIGN.md §7): a channel is the (peer, message-type)
+pair. Receives are addressed by sequence number, and anything that
+arrives early — a later frame racing a bare message, sub-messages of a
+coalesced frame — is parked in a per-channel reorder buffer and
+delivered in order. ``ch.frame(to)`` coalesces every send inside the
+``with`` block into ONE wire message (one length prefix, one syscall,
+one packet for small control rounds); the receiving channel unpacks it
+transparently. Declaring a message with ``compress=True`` lets the
+channel quantize its float payloads to int8 (+per-column scale) with
+error feedback when the channel was built with ``compress=True`` —
+protocols opt in per message type; HE ciphertext channels simply never
+declare it.
+
 Wire compatibility: a stepped message named ``linreg/z`` with sequence
 number 7 rides the existing transports under the tag ``linreg/z/7`` —
 the same tag the hand-rolled protocols produced, so per-tag byte
@@ -20,13 +33,15 @@ accounting and captured traces stay comparable across the redesign.
 """
 from __future__ import annotations
 
+import json
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.comm.base import Message, PartyCommunicator, Payload
+from repro.comm.base import (Message, PartyCommunicator, Payload,
+                             RecvFuture, SendFuture)
 
 
 class SchemaError(ValueError):
@@ -55,20 +70,28 @@ class MsgType:
     name: str
     fields: Optional[Mapping[str, Field]]   # None = free-form payload
     stepped: bool = False
+    compress: bool = False
     doc: str = ""
 
 
 MESSAGES: Dict[str, MsgType] = {}
 
+# channel-internal meta keys (never user-set)
+_COMP_META = "comp"            # json: [[field, orig_dtype], ...]
+_FRAME_META = "frame"          # json: [[name, seq, fields, meta], ...]
+_FRAME_TYPE = "frame"          # wire tag prefix for coalesced frames
+
 
 def message(name: str, fields: Optional[Mapping[str, Field]] = None,
-            stepped: bool = False, doc: str = "") -> MsgType:
+            stepped: bool = False, compress: bool = False,
+            doc: str = "") -> MsgType:
     """Declare (or idempotently re-declare) a message type."""
     mt = MsgType(name, dict(fields) if fields is not None else None,
-                 stepped, doc)
+                 stepped, compress, doc)
     prev = MESSAGES.get(name)
-    if prev is not None and (prev.fields, prev.stepped) != (mt.fields,
-                                                            mt.stepped):
+    if prev is not None and \
+            (prev.fields, prev.stepped, prev.compress) != \
+            (mt.fields, mt.stepped, mt.compress):
         raise SchemaError(f"conflicting redeclaration of {name!r}")
     MESSAGES[name] = mt
     return mt
@@ -112,19 +135,40 @@ def lookup(name: str) -> MsgType:
     return mt
 
 
+class _FrameBuffer:
+    """Sends buffered inside a ``ch.frame(to)`` block."""
+
+    __slots__ = ("to", "parts")
+
+    def __init__(self, to: str):
+        self.to = to
+        self.parts: List[Tuple[str, int, Payload, Dict[str, str]]] = []
+
+
 class TypedChannel:
     """Schema-enforcing facade over a :class:`PartyCommunicator`.
 
     Sequence numbers for stepped message types are kept per
     (peer, message-type) pair and advanced automatically on every
     send/recv, so both ends stay in lock-step without protocol code
-    ever formatting a tag.
+    ever formatting a tag. Out-of-order arrivals (frames racing bare
+    messages) are reordered per channel before delivery.
     """
 
-    def __init__(self, comm: PartyCommunicator):
+    def __init__(self, comm: PartyCommunicator, compress: bool = False):
         self.comm = comm
+        self.compress = compress
         self._send_seq: Dict[tuple, int] = defaultdict(int)
         self._recv_seq: Dict[tuple, int] = defaultdict(int)
+        # (frm, name) -> {seq or None: [Message, ...]} delivered early;
+        # inner keys are deleted once drained (a long fit would
+        # otherwise leak one entry per step per channel)
+        self._reorder: Dict[tuple, Dict[Optional[int], list]] = \
+            defaultdict(dict)
+        self._frame_send_seq: Dict[str, int] = defaultdict(int)
+        self._frame_recv_seq: Dict[str, int] = defaultdict(int)
+        self._framing: Optional[_FrameBuffer] = None
+        self.error_feedback = None       # lazily built ErrorFeedback
 
     # mirror the communicator's identity surface so match/protocol code
     # can treat a TypedChannel as "the comm with types"
@@ -147,19 +191,156 @@ class TypedChannel:
     def _wire_tag(self, mt: MsgType, seq: int) -> str:
         return f"{mt.name}/{seq}" if mt.stepped else mt.name
 
-    def send(self, to: str, name: str, payload: Payload,
-             meta: Optional[Dict[str, str]] = None) -> None:
+    # -- compression ---------------------------------------------------------
+    def _compress_payload(self, mt: MsgType, payload: Payload,
+                          meta: Dict[str, str], to: str
+                          ) -> Tuple[Payload, Dict[str, str]]:
+        from repro.core import compression
+        if self.error_feedback is None:
+            self.error_feedback = compression.ErrorFeedback()
+        out: Payload = {}
+        comp: List[List[str]] = []
+        for k, v in payload.items():
+            arr = np.asarray(v)
+            if arr.dtype.kind == "f" and arr.ndim >= 1 and arr.size:
+                q, scale = self.error_feedback.compress(
+                    f"{to}/{mt.name}/{k}", arr.astype(np.float32))
+                out[f"{k}.q"] = q
+                out[f"{k}.scale"] = scale
+                comp.append([k, arr.dtype.name])
+            else:
+                out[k] = arr
+        if comp:
+            meta = dict(meta)
+            meta[_COMP_META] = json.dumps(comp)
+        return out, meta
+
+    @staticmethod
+    def _decompress(msg: Message) -> Message:
+        from repro.core import compression
+        spec = msg.meta.pop(_COMP_META, None)
+        if spec is None:
+            return msg
+        payload = dict(msg.payload)
+        for k, dtype in json.loads(spec):
+            q = payload.pop(f"{k}.q")
+            scale = payload.pop(f"{k}.scale")
+            payload[k] = compression.dequantize_int8(q, scale) \
+                .astype(dtype)
+        msg.payload = payload
+        return msg
+
+    # -- send side -----------------------------------------------------------
+    def _prepare(self, to: str, name: str, payload: Payload,
+                 meta: Optional[Dict[str, str]]
+                 ) -> Tuple[MsgType, int, Payload, Dict[str, str]]:
         mt = lookup(name)
-        _check(mt, payload, meta or {}, "send")
+        payload = {k: np.asarray(v) for k, v in payload.items()}
+        meta = dict(meta or {})
+        _check(mt, payload, meta, "send")
+        if self.compress and mt.compress:
+            payload, meta = self._compress_payload(mt, payload, meta, to)
         seq = self._send_seq[(to, name)]
         if mt.stepped:
             self._send_seq[(to, name)] = seq + 1
+        return mt, seq, payload, meta
+
+    def send(self, to: str, name: str, payload: Payload,
+             meta: Optional[Dict[str, str]] = None) -> None:
+        mt, seq, payload, meta = self._prepare(to, name, payload, meta)
+        if self._framing is not None and self._framing.to == to:
+            self._framing.parts.append((name, seq, payload, meta))
+            return
         self.comm.send(to, self._wire_tag(mt, seq), payload, meta=meta)
 
-    def recv(self, frm: str, name: str) -> Message:
+    def isend(self, to: str, name: str, payload: Payload,
+              meta: Optional[Dict[str, str]] = None
+              ) -> Optional[SendFuture]:
+        """Non-blocking typed send; returns the transport future (or
+        None when buffered into an open frame)."""
+        mt, seq, payload, meta = self._prepare(to, name, payload, meta)
+        if self._framing is not None and self._framing.to == to:
+            self._framing.parts.append((name, seq, payload, meta))
+            return None
+        return self.comm.isend(to, self._wire_tag(mt, seq), payload,
+                               meta=meta)
+
+    def frame(self, to: str, wait: bool = True) -> "_FrameContext":
+        """Coalesce every send to ``to`` inside the block into one wire
+        message (single prefix+body buffer; one packet for small
+        control rounds). Sends to other peers pass through unchanged."""
+        return _FrameContext(self, to, wait)
+
+    def _flush_frame(self, fb: _FrameBuffer, wait: bool) -> None:
+        if not fb.parts:
+            return
+        if len(fb.parts) == 1:           # no coalescing win: send bare
+            name, seq, payload, meta = fb.parts[0]
+            tag = self._wire_tag(lookup(name), seq)
+            if wait:
+                self.comm.send(fb.to, tag, payload, meta=meta)
+            else:
+                self.comm.isend(fb.to, tag, payload, meta=meta)
+            return
+        merged: Payload = {}
+        spec = []
+        for i, (name, seq, payload, meta) in enumerate(fb.parts):
+            for k, v in payload.items():
+                merged[f"{i}.{k}"] = v
+            spec.append([name, seq, sorted(payload), meta])
+        fseq = self._frame_send_seq[fb.to]
+        self._frame_send_seq[fb.to] = fseq + 1
+        tag = f"{_FRAME_TYPE}/{fseq}"
+        meta = {_FRAME_META: json.dumps(spec)}
+        if wait:
+            self.comm.send(fb.to, tag, merged, meta=meta)
+        else:
+            self.comm.isend(fb.to, tag, merged, meta=meta)
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Wait until every queued async send hit the wire."""
+        self.comm.flush_sends(timeout)
+
+    # -- recv side -----------------------------------------------------------
+    def _unpack_frame(self, frm: str, msg: Message) -> None:
+        spec = json.loads(msg.meta[_FRAME_META])
+        for i, (name, seq, fields, meta) in enumerate(spec):
+            payload = {k: msg.payload[f"{i}.{k}"] for k in fields}
+            sub = Message(frm, self.comm.me,
+                          self._wire_tag(lookup(name), seq),
+                          payload, dict(meta))
+            mt = lookup(name)
+            key = seq if mt.stepped else None
+            self._reorder[(frm, name)].setdefault(key, []).append(sub)
+
+    def _pull(self, frm: str, mt: MsgType, seq: int,
+              timeout: Optional[float] = None) -> Message:
+        """Deliver (frm, mt, seq): from the reorder buffer if it arrived
+        early (inside a frame), else from the transport — unpacking any
+        interleaved frames along the way."""
+        key = seq if mt.stepped else None
+        buf = self._reorder[(frm, mt.name)]
+        while True:
+            lst = buf.get(key)
+            if lst:
+                msg = lst.pop(0)
+                if not lst:
+                    del buf[key]
+                return self._decompress(msg)
+            tags = (self._wire_tag(mt, seq),
+                    f"{_FRAME_TYPE}/{self._frame_recv_seq[frm]}")
+            msg = self.comm.recv_any(frm, tags, timeout)
+            if msg.tag == tags[1]:
+                self._frame_recv_seq[frm] += 1
+                self._unpack_frame(frm, msg)
+                continue
+            return self._decompress(msg)
+
+    def recv(self, frm: str, name: str,
+             timeout: Optional[float] = None) -> Message:
         mt = lookup(name)
         seq = self._recv_seq[(frm, name)]
-        msg = self.comm.recv(frm, self._wire_tag(mt, seq))
+        msg = self._pull(frm, mt, seq, timeout)
         # advance only after the transport delivered: a timed-out recv
         # must be retryable without skipping a sequence number
         if mt.stepped:
@@ -167,12 +348,64 @@ class TypedChannel:
         _check(mt, msg.payload, msg.meta, "recv")
         return msg
 
+    def irecv(self, frm: str, name: str) -> RecvFuture:
+        """Deferred typed receive. The returned future owns this
+        channel position (the sequence number advances now); resolve it
+        from the agent's own thread."""
+        mt = lookup(name)
+        seq = self._recv_seq[(frm, name)]
+        if mt.stepped:
+            self._recv_seq[(frm, name)] = seq + 1
+
+        def _resolve(timeout: Optional[float]) -> Message:
+            msg = self._pull(frm, mt, seq, timeout)
+            _check(mt, msg.payload, msg.meta, "recv")
+            return msg
+
+        def _peek() -> bool:
+            key = seq if mt.stepped else None
+            return bool(self._reorder[(frm, mt.name)].get(key)) or \
+                self.comm._peek(frm, (self._wire_tag(mt, seq),))
+
+        return RecvFuture(_resolve, _peek)
+
+    # -- collectives ---------------------------------------------------------
     def broadcast(self, name: str, payload: Payload,
                   targets: Optional[Sequence[str]] = None,
-                  meta: Optional[Dict[str, str]] = None) -> None:
+                  meta: Optional[Dict[str, str]] = None,
+                  wait: bool = True) -> List[SendFuture]:
+        futs = []
         for t in (targets if targets is not None else self.world):
-            if t != self.me:
+            if t == self.me:
+                continue
+            if wait:
                 self.send(t, name, payload, meta=meta)
+            else:
+                f = self.isend(t, name, payload, meta=meta)
+                if f is not None:
+                    futs.append(f)
+        return futs
 
     def gather(self, frm: Sequence[str], name: str) -> List[Message]:
-        return [self.recv(f, name) for f in frm]
+        futs = [self.irecv(f, name) for f in frm]
+        return [f.result(self.comm._timeout) for f in futs]
+
+
+class _FrameContext:
+    def __init__(self, ch: TypedChannel, to: str, wait: bool = True):
+        self.ch = ch
+        self.to = to
+        self.wait = wait
+
+    def __enter__(self) -> TypedChannel:
+        if self.ch._framing is not None:
+            raise SchemaError("nested frame() blocks are not supported")
+        self.ch._framing = _FrameBuffer(self.to)
+        return self.ch
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # flush even when the block raised: the buffered sends already
+        # consumed their channel sequence numbers in _prepare, so
+        # dropping them would desync the peer forever
+        fb, self.ch._framing = self.ch._framing, None
+        self.ch._flush_frame(fb, self.wait)

@@ -5,41 +5,81 @@ payloads; semantics are identical for protocol purposes).
 Every agent runs a listener thread; messages are length-prefixed
 safetensors blobs. Agents connect lazily and reuse sockets. Works across
 hosts; in tests everything binds to 127.0.0.1.
+
+Latency engineering (DESIGN.md §7): ``TCP_NODELAY`` is set on both the
+connecting and the accepted side (small control messages used to sit in
+Nagle's buffer waiting for the peer's delayed ACK), and small frames go
+out as ONE ``sendall`` buffer (prefix + body) so a frame never straddles
+a Nagle boundary; large bodies skip the concat copy. A connection that
+drops mid-frame marks its sender as down and wakes every waiter —
+``recv`` from a dead peer raises ``ConnectionError`` immediately instead
+of hanging until the timeout.
 """
 from __future__ import annotations
 
 import socket
 import struct
 import threading
-from collections import defaultdict
-from typing import Dict, Sequence, Tuple
+import time
+from typing import Dict, Optional, Sequence, Set, Tuple
 
 from repro.comm import codec
 from repro.comm.base import Message, PartyCommunicator
 
+# below this, prefix+body are concatenated into one buffer (one packet
+# under NODELAY); above it, the concat copy costs more than it saves
+_INLINE_FRAME_BYTES = 1 << 16
+
+
+class _MidFrameClose(ConnectionError):
+    """The peer closed with a partially-delivered read outstanding."""
+
 
 def _recv_exact(conn: socket.socket, n: int) -> bytes:
-    buf = b""
-    while len(buf) < n:
-        chunk = conn.recv(n - len(buf))
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = conn.recv(n - got)
         if not chunk:
+            if got:
+                raise _MidFrameClose(
+                    f"socket closed mid-frame ({got}/{n} bytes)")
             raise ConnectionError("socket closed")
-        buf += chunk
-    return buf
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
 
 
 class SocketCommunicator(PartyCommunicator):
-    def __init__(self, me: str, addresses: Dict[str, Tuple[str, int]]):
-        """addresses: agent id -> (host, port) for EVERY agent."""
-        super().__init__(me, list(addresses))
+    def __init__(self, me: str, addresses: Dict[str, Tuple[str, int]],
+                 timeout: float = 120.0, nodelay: bool = True):
+        """addresses: agent id -> (host, port) for EVERY agent.
+
+        ``timeout`` bounds every blocking wait (connect + recv);
+        ``nodelay`` disables Nagle (keep True — the flag exists so the
+        benchmark can measure the before/after honestly).
+        """
+        super().__init__(me, list(addresses), timeout=timeout)
         self._addr = dict(addresses)
-        self._pending: Dict[Tuple[str, str], list] = defaultdict(list)
-        self._inbox: "list" = []
+        self._pending: Dict[Tuple[str, str], list] = {}
         self._cv = threading.Condition()
         self._out: Dict[str, socket.socket] = {}
-        self._timeout = 120.0
+        self._down: Set[str] = set()
+        self._nodelay = nodelay
         host, port = self._addr[me]
-        self._server = socket.create_server((host, port), backlog=16)
+        # pre-allocated ports can be sniped between allocation and bind
+        # (socket_proc: the bind happens seconds later in a spawned
+        # child) — retry transient EADDRINUSE briefly before giving up
+        deadline = time.monotonic() + min(self._timeout, 10.0)
+        while True:
+            try:
+                self._server = socket.create_server((host, port),
+                                                    backlog=16)
+                break
+            except OSError:
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.1)
         self._alive = True
         self._listener = threading.Thread(target=self._listen, daemon=True)
         self._listener.start()
@@ -51,45 +91,122 @@ class SocketCommunicator(PartyCommunicator):
                 conn, _ = self._server.accept()
             except OSError:
                 return
+            if self._nodelay:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             threading.Thread(target=self._serve_conn, args=(conn,),
                              daemon=True).start()
 
     def _serve_conn(self, conn: socket.socket):
+        sender: Optional[str] = None
+        mid_frame = False
         try:
+            # connection hello: the first frame is the peer's agent id,
+            # so even a drop during the peer's FIRST data frame is
+            # attributable and fails waiters instead of hanging
+            (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
+            sender = _recv_exact(conn, n).decode()
             while True:
+                mid_frame = False
                 (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
+                mid_frame = True
                 raw = _recv_exact(conn, n)
                 payload, meta = codec.decode(raw)
-                sender = meta.pop("sender")
+                sender = meta.pop("sender", sender)
                 tag = meta.pop("tag")
                 msg = Message(sender, self.me, tag, payload, meta)
                 with self._cv:
-                    self._pending[(sender, tag)].append(msg)
+                    self._pending.setdefault((sender, tag),
+                                             []).append(msg)
                     self._cv.notify_all()
-        except (ConnectionError, OSError):
+        except (ConnectionError, OSError) as e:
+            # a clean close lands exactly between frames; a drop with
+            # bytes outstanding (inside the body — mid_frame — or even
+            # inside the next length prefix, _MidFrameClose) means the
+            # peer died with a message on the wire. The sender delivers
+            # nothing further: mark it down and wake waiters so they
+            # error instead of hanging out the timeout.
+            if sender is not None and self._alive \
+                    and (mid_frame or isinstance(e, _MidFrameClose)):
+                with self._cv:
+                    self._down.add(sender)
+                    self._cv.notify_all()
             return
 
     # -- client side ---------------------------------------------------------
     def _conn_to(self, to: str) -> socket.socket:
         if to not in self._out:
-            self._out[to] = socket.create_connection(self._addr[to],
-                                                     timeout=self._timeout)
+            # peers boot independently (one process per agent): retry
+            # refused connects until the peer's listener is up, bounded
+            # by the configured timeout
+            deadline = time.monotonic() + self._timeout
+            while True:
+                try:
+                    conn = socket.create_connection(
+                        self._addr[to], timeout=self._timeout)
+                    break
+                except ConnectionRefusedError:
+                    if time.monotonic() > deadline:
+                        raise
+                    time.sleep(0.05)
+            if self._nodelay:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            me = self.me.encode()
+            conn.sendall(struct.pack("<Q", len(me)) + me)   # hello
+            self._out[to] = conn
         return self._out[to]
 
     def _send(self, msg: Message, raw: bytes) -> None:
         conn = self._conn_to(msg.recipient)
-        conn.sendall(struct.pack("<Q", len(raw)) + raw)
+        prefix = struct.pack("<Q", len(raw))
+        try:
+            if len(raw) <= _INLINE_FRAME_BYTES:
+                conn.sendall(prefix + raw)  # one buffer -> one packet
+            else:
+                conn.sendall(prefix)
+                conn.sendall(raw)
+        except BaseException:
+            # the stream may be mid-frame: drop the connection so no
+            # later write can corrupt the peer's length-prefix parse
+            self._out.pop(msg.recipient, None)
+            try:
+                conn.close()
+            except OSError:
+                pass
+            raise
 
-    def _recv(self, frm: str, tag: str) -> Message:
-        key = (frm, tag)
+    def _recv_any(self, frm: str, tags: Sequence[str],
+                  timeout: Optional[float] = None) -> Message:
+        timeout = self._timeout if timeout is None else timeout
+        keys = [(frm, t) for t in tags]
+
+        def ready():
+            return any(self._pending.get(k) for k in keys) \
+                or frm in self._down
+
         with self._cv:
-            ok = self._cv.wait_for(lambda: bool(self._pending[key]),
-                                   timeout=self._timeout)
+            ok = self._cv.wait_for(ready, timeout=timeout)
+            for k in keys:
+                lst = self._pending.get(k)
+                if lst:
+                    msg = lst.pop(0)
+                    if not lst:     # delete drained stepped-tag entries
+                        del self._pending[k]
+                    return msg
+            if frm in self._down:
+                raise ConnectionError(
+                    f"{self.me}: connection from {frm!r} dropped "
+                    f"mid-frame with no message {list(tags)} pending")
             if not ok:
-                raise TimeoutError(f"{self.me}: no message {key}")
-            return self._pending[key].pop(0)
+                raise TimeoutError(f"{self.me}: no message "
+                                   f"{frm}/{list(tags)}")
+            raise AssertionError("unreachable")   # pragma: no cover
+
+    def _peek(self, frm: str, tags: Sequence[str]) -> bool:
+        with self._cv:
+            return any(self._pending.get((frm, t)) for t in tags)
 
     def close(self) -> None:
+        super().close()                  # drain + stop the sender thread
         self._alive = False
         try:
             self._server.close()

@@ -78,7 +78,8 @@ class VFLAgent:
         self.comm = comm
         self.cfg = cfg
         proto_cls = resolve_protocol(cfg.protocol)
-        proto = proto_cls(cfg, TypedChannel(comm), comm.me)
+        proto = proto_cls(cfg, TypedChannel(comm, compress=cfg.compress),
+                          comm.me)
         resume = load_checkpoint(resume_dir, comm.me) if resume_dir \
             else None
         self.driver = Driver(proto, callbacks=callbacks,
@@ -168,7 +169,8 @@ def _agent_entry(role: str, comm: PartyCommunicator, cfg: VFLConfig,
                  data, out: Dict[str, Any], callbacks=None,
                  resume_dir=None, cmd_q=None, res_q=None) -> None:
     proto_cls = resolve_protocol(cfg.protocol)
-    proto = proto_cls(cfg, TypedChannel(comm), role)
+    proto = proto_cls(cfg, TypedChannel(comm, compress=cfg.compress),
+                      role)
     resume = load_checkpoint(resume_dir, role) if resume_dir else None
     driver = Driver(proto, callbacks=callbacks or (), resume_state=resume)
     try:
@@ -189,14 +191,27 @@ def _agent_entry(role: str, comm: PartyCommunicator, cfg: VFLConfig,
             comm.close()
 
 
-def _mp_entry(role, bus_boxes, world, cfg, data, q, callbacks=None,
-              resume_dir=None, cmd_q=None, res_q=None):
-    # module-level for picklability (spawn)
-    from repro.comm.process import ProcessBus, ProcessCommunicator
-    bus = ProcessBus.__new__(ProcessBus)
-    bus.world = world
-    bus.boxes = bus_boxes
-    comm = ProcessCommunicator(role, bus)
+def _mp_entry(role, transport, world, cfg, data, q, callbacks=None,
+              resume_dir=None, cmd_q=None, res_q=None,
+              comm_timeout=None):
+    # module-level for picklability (spawn). ``transport`` selects the
+    # wire: ("bus", mp queue boxes) or ("sock", address map) — the
+    # latter runs every agent as its own OS process talking TCP, the
+    # paper's distributed deployment (and the shape where pipelined
+    # rounds overlap with real parallelism, GIL-free).
+    kind, arg = transport
+    tkw = {} if comm_timeout is None else {"timeout": comm_timeout}
+    if kind == "bus":
+        from repro.comm.process import ProcessBus, ProcessCommunicator
+        bus = ProcessBus.__new__(ProcessBus)
+        bus.world = world
+        bus.boxes = arg
+        comm = ProcessCommunicator(role, bus, **tkw)
+    elif kind == "sock":
+        from repro.comm.sock import SocketCommunicator
+        comm = SocketCommunicator(role, arg, **tkw)
+    else:
+        raise ValueError(f"unknown transport {kind!r}")
     out: Dict[str, Any] = {}
     try:
         _agent_entry(role, comm, cfg, data, out, callbacks, resume_dir,
@@ -231,7 +246,15 @@ class VFLJob:
     def __init__(self, cfg: VFLConfig, master_data: MasterData,
                  member_datas: List[MemberData], mode: str = "thread",
                  callbacks: Sequence[Callback] = (),
-                 resume_dir: Optional[str] = None):
+                 resume_dir: Optional[str] = None,
+                 pipeline_depth: Optional[int] = None,
+                 comm_timeout: Optional[float] = None):
+        """``pipeline_depth`` overrides ``cfg.pipeline_depth`` (1 =
+        synchronous lock-step, D >= 2 = bounded-staleness pipelining);
+        ``comm_timeout`` overrides each transport's per-message wait."""
+        import dataclasses
+        if pipeline_depth is not None:
+            cfg = dataclasses.replace(cfg, pipeline_depth=pipeline_depth)
         self.cfg = cfg
         self.mode = mode
         self.world = world_for(cfg, len(member_datas))
@@ -253,11 +276,16 @@ class VFLJob:
             self._res_q: Any = queue.Queue()
             if mode == "thread":
                 bus = ThreadBus(self.world)
-                comms = {w: bus.communicator(w) for w in self.world}
+                comms = {w: bus.communicator(
+                    w, **({} if comm_timeout is None
+                          else {"timeout": comm_timeout}))
+                    for w in self.world}
             else:
                 addrs = local_addresses(self.world)
-                comms = {w: SocketCommunicator(w, addrs)
-                         for w in self.world}
+                comms = {w: SocketCommunicator(
+                    w, addrs, **({} if comm_timeout is None
+                                 else {"timeout": comm_timeout}))
+                    for w in self.world}
             for w in self.world:
                 is_m = w == "master"
                 t = threading.Thread(
@@ -269,13 +297,21 @@ class VFLJob:
                     daemon=True)
                 self._threads.append(t)
                 t.start()
-        elif mode == "process":
+        elif mode in ("process", "socket_proc"):
             ctx = mp.get_context("spawn")
-            from repro.comm.process import ProcessBus
-            # the bus must outlive __init__: Process.start() drops its
-            # args reference, and a GC'd mp.Queue unlinks its named
-            # semaphores before slow-importing children rebuild them
-            self._bus = bus = ProcessBus(self.world, ctx)
+            if mode == "process":
+                from repro.comm.process import ProcessBus
+                # the bus must outlive __init__: Process.start() drops
+                # its args reference, and a GC'd mp.Queue unlinks its
+                # named semaphores before slow-importing children
+                # rebuild them
+                self._bus = bus = ProcessBus(self.world, ctx)
+                transport = ("bus", bus.boxes)
+            else:
+                # one OS process per agent over real TCP — the paper's
+                # distributed deployment on one host; control replies
+                # still ride mp queues
+                transport = ("sock", local_addresses(self.world))
             self._q = ctx.Queue()
             self._cmd_q = ctx.Queue()
             self._res_q = ctx.Queue()
@@ -283,10 +319,11 @@ class VFLJob:
                 is_m = w == "master"
                 p = ctx.Process(
                     target=_mp_entry,
-                    args=(w, bus.boxes, self.world, cfg, datas[w],
+                    args=(w, transport, self.world, cfg, datas[w],
                           self._q, list(callbacks), resume_dir,
                           self._cmd_q if is_m else None,
-                          self._res_q if is_m else None))
+                          self._res_q if is_m else None,
+                          comm_timeout))
                 # daemonized: an abandoned job (no shutdown) must not
                 # block interpreter exit on multiprocessing's atexit join
                 p.daemon = True
@@ -395,7 +432,7 @@ class VFLJob:
             p.join(timeout=10)
 
     def _finish(self, timeout: float) -> Dict[str, Any]:
-        if self.mode == "process":
+        if self._procs:
             deadline = time.monotonic() + timeout
             while len(self._results) < len(self.world) \
                     and time.monotonic() < deadline:
@@ -425,7 +462,8 @@ class VFLJob:
 def run_vfl(cfg: VFLConfig, master_data: MasterData,
             member_datas: List[MemberData], mode: str = "thread",
             callbacks: Sequence[Callback] = (),
-            resume_dir: Optional[str] = None) -> Dict[str, Any]:
+            resume_dir: Optional[str] = None,
+            pipeline_depth: Optional[int] = None) -> Dict[str, Any]:
     """One-shot job (matching + training + teardown) in the given mode.
 
     Compatibility wrapper over :class:`VFLJob` — returns the per-role
@@ -434,6 +472,7 @@ def run_vfl(cfg: VFLConfig, master_data: MasterData,
     multiple phases on live agents.
     """
     job = VFLJob(cfg, master_data, member_datas, mode=mode,
-                 callbacks=callbacks, resume_dir=resume_dir)
+                 callbacks=callbacks, resume_dir=resume_dir,
+                 pipeline_depth=pipeline_depth)
     job.fit()
     return job.shutdown()

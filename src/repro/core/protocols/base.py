@@ -41,6 +41,13 @@ class VFLConfig:
     hidden: Tuple[int, ...] = (32,)
     use_psi: bool = True          # DH-PSI vs salted-hash matching
     record_every: int = 1
+    # async exchange engine (DESIGN.md §7): how many training rounds the
+    # master announces ahead of the one it is computing. 1 = strictly
+    # synchronous lock-step (bit-identical to the recorded seed traces);
+    # D >= 2 = bounded-staleness pipelining — members run their forward
+    # stage up to D-1 steps ahead of the last gradient they applied, so
+    # compute overlaps in-flight exchanges.
+    pipeline_depth: int = 1
     # keep the final short batch of each epoch (True reproduces the old
     # silent tail-drop; every party derives the tail identically either
     # way, so modes always agree on batch boundaries)

@@ -38,6 +38,7 @@ from __future__ import annotations
 import pickle
 import queue
 import time
+from collections import deque
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -80,6 +81,11 @@ class VFLProtocol:
 
     name: str = "?"
     needs_arbiter: bool = False
+    # protocols that split the member round into a send stage (compute
+    # outbound from current — possibly stale — state) and a recv stage
+    # (consume the master's reply, apply the update) can run pipelined
+    # at cfg.pipeline_depth >= 2; see member_stage_send/_recv below.
+    supports_pipeline: bool = False
 
     def __init__(self, cfg: VFLConfig, ch: TypedChannel, role: str):
         self.cfg = cfg
@@ -119,6 +125,28 @@ class VFLProtocol:
         raise NotImplementedError
 
     def on_batch_member(self, rows: np.ndarray, step: int) -> None:
+        """One synchronous member round. Pipeline-capable protocols get
+        this for free as stage_send immediately followed by stage_recv —
+        which is exactly what guarantees ``pipeline_depth=1`` stays
+        bit-identical to the pipelined hooks."""
+        if not self.supports_pipeline:
+            raise NotImplementedError
+        ctx = self.member_stage_send(rows, step)
+        self.member_stage_recv(rows, step, ctx)
+
+    # -- pipelined member stages (supports_pipeline protocols) ---------------
+    def member_stage_send(self, rows: np.ndarray, step: int) -> Any:
+        """Compute this step's outbound tensors from the member's
+        *current* state and isend them. Returns an opaque ctx handed
+        back to :meth:`member_stage_recv` (e.g. the cached batch
+        slice). With ``pipeline_depth=D`` the driver runs this up to
+        D-1 steps ahead of the matching recv stage."""
+        raise NotImplementedError
+
+    def member_stage_recv(self, rows: np.ndarray, step: int,
+                          ctx: Any) -> None:
+        """Consume the master's reply for ``step`` and apply the local
+        update."""
         raise NotImplementedError
 
     def arbiter_round(self, step: int) -> None:
@@ -360,12 +388,28 @@ class Driver:
     # -- master side ---------------------------------------------------------
     def fit(self, epochs: Optional[int] = None) -> Dict[str, Any]:
         """Run the training phase (master only): announce FIT, drive the
-        epoch/batch loop, broadcast one RUN round per batch, handle
-        callbacks / early stop, then close the phase with END."""
+        epoch/batch loop, broadcast RUN rounds, handle callbacks /
+        early stop, then close the phase with END.
+
+        The master keeps a sliding window of up to ``cfg.pipeline_depth``
+        announced-but-not-yet-computed rounds. At depth 1 (default) the
+        announce/compute interleaving is exactly the synchronous
+        lock-step loop. At depth D >= 2 members see future rounds early
+        and run their send stage ahead (bounded staleness); every
+        announced round IS computed — a stop request only stops new
+        announcements, so stops take effect within D-1 rounds and no
+        follower is ever left waiting on a round that never happens.
+        """
         assert self.role == "master"
         t0 = time.perf_counter()
         cfg = self.cfg
         epochs = cfg.epochs if epochs is None else epochs
+        # protocols without stage hooks run their members synchronously;
+        # announcing ahead of them would deadlock a mid-fit eval (the
+        # member sits inside on_batch_member for an announced round the
+        # master hasn't computed), so the window collapses to 1
+        depth = max(1, int(cfg.pipeline_depth)) \
+            if self.proto.supports_pipeline else 1
         self.ch.stats.phase = "fit"
         self.ch.broadcast("ctrl/phase", {"op": np.array([PHASE_FIT], np.int64)},
                           targets=self._others)
@@ -373,32 +417,61 @@ class Driver:
         self._invoke("on_fit_start")
         start_epoch, start_batch = self._pos
         bounds = batch_bounds(self.n, cfg)
-        for epoch in range(start_epoch, epochs):
-            first = start_batch if epoch == start_epoch else 0
-            if first == 0:
-                self._invoke("on_epoch_start", epoch)
-            perm = batch_order(self.n, cfg, epoch)
-            for b in range(first, len(bounds)):
-                lo, hi = bounds[b]
+        last_b = len(bounds) - 1
+
+        def _schedule():
+            for epoch in range(start_epoch, epochs):
+                first = start_batch if epoch == start_epoch else 0
+                for b in range(first, len(bounds)):
+                    yield epoch, b, bounds[b]
+
+        sched = _schedule()
+        announced: "deque" = deque()
+        exhausted = False
+        cached_epoch, perm = None, None
+        while True:
+            while not self._stop and not exhausted \
+                    and len(announced) < depth:
+                try:
+                    epoch, b, (lo, hi) = next(sched)
+                except StopIteration:
+                    exhausted = True
+                    break
+                # epoch-start callbacks run BEFORE the epoch's first
+                # round is announced (so a callback may run comm rounds,
+                # e.g. an eval pass, with no member mid-round). At
+                # depth 1 this is the legacy ordering exactly; at
+                # depth >= 2 on_epoch_start(e) can fire while the tail
+                # of epoch e-1 is still computing.
+                if b == 0:
+                    self._invoke("on_epoch_start", epoch)
                 self.ch.broadcast("ctrl/step",
                                   _step_payload(OP_RUN, epoch, lo, hi),
-                                  targets=self._others)
-                loss = self.proto.on_batch_master(perm[lo:hi],
-                                                  self.global_step)
-                if self.global_step % cfg.record_every == 0:
-                    self.history.append({"step": self.global_step,
-                                         "epoch": epoch, "loss": loss})
-                self.global_step += 1
-                self._pos = (epoch, b + 1)
-                self._invoke("on_batch_end", self.global_step - 1, epoch,
-                             loss)
-                if self._stop:
-                    break
-            if not self._stop:
+                                  targets=self._others,
+                                  wait=(depth == 1))
+                announced.append((epoch, b, lo, hi))
+            if not announced:
+                break
+            epoch, b, lo, hi = announced.popleft()
+            if epoch != cached_epoch:
+                perm = batch_order(self.n, cfg, epoch)
+                cached_epoch = epoch
+            loss = self.proto.on_batch_master(perm[lo:hi],
+                                              self.global_step)
+            if self.global_step % cfg.record_every == 0:
+                # wall_s (since fit start) lets offline analysis split
+                # steady-state step time from jit/pipeline warmup
+                self.history.append({"step": self.global_step,
+                                     "epoch": epoch, "loss": loss,
+                                     "wall_s": round(
+                                         time.perf_counter() - t0, 6)})
+            self.global_step += 1
+            self._pos = (epoch, b + 1)
+            self._invoke("on_batch_end", self.global_step - 1, epoch,
+                         loss)
+            if b == last_b and not self._stop:
                 self._pos = (epoch + 1, 0)
                 self._invoke("on_epoch_end", epoch)
-            if self._stop:
-                break
         self.ch.broadcast("ctrl/step", _step_payload(OP_END, -1, 0, 0),
                           targets=self._others)
         self.stopped = self._stop
@@ -435,12 +508,15 @@ class Driver:
         parts = []
         for lo in range(0, len(rows), bs):
             sub = rows[lo:lo + bs]
-            self.ch.broadcast(
-                "ctrl/step",
-                _step_payload(OP_EVAL, -1, lo, lo + len(sub)),
-                targets=self._others)
-            self.ch.broadcast("predict/rows", {"rows": sub},
-                              targets=self.ch.members)
+            step = _step_payload(OP_EVAL, -1, lo, lo + len(sub))
+            # one coalesced frame per member: the EVAL announcement and
+            # its query rows ride a single wire message (DESIGN.md §7)
+            for m in self.ch.members:
+                with self.ch.frame(m):
+                    self.ch.send(m, "ctrl/step", step)
+                    self.ch.send(m, "predict/rows", {"rows": sub})
+            if "arbiter" in self.ch.world:
+                self.ch.send("arbiter", "ctrl/step", step)
             parts.append(np.asarray(self.proto.predict_master(sub)))
         return np.concatenate(parts, axis=0) if parts else \
             np.zeros((0, 1))
@@ -494,11 +570,33 @@ class Driver:
         return self.result()
 
     def _follow_steps(self) -> None:
+        """Reactive round loop. Synchronous members execute each RUN
+        round in place; with ``pipeline_depth=D >= 2`` a
+        pipeline-capable member keeps up to D rounds in flight — the
+        send stage runs as soon as a round is announced, the recv stage
+        (gradient apply) is deferred until the window is full or the
+        phase ends. The master computes every round it announced, so
+        draining the window at END never blocks on a missing reply.
+        EVAL rounds are answered immediately with the current (possibly
+        bounded-stale) parameters."""
+        cfg = self.cfg
+        depth = max(1, int(cfg.pipeline_depth))
+        pipelined = (depth > 1 and self.role != "arbiter"
+                     and self.proto.supports_pipeline)
+        inflight: "deque" = deque()       # (rows, step, epoch, ctx)
         cached_epoch, perm = None, None
+
+        def _complete_one() -> None:
+            rows0, step0, epoch0, ctx0 = inflight.popleft()
+            self.proto.member_stage_recv(rows0, step0, ctx0)
+            self._invoke("on_batch_end", step0, epoch0, None)
+
         while True:
             msg = self.ch.recv("master", "ctrl/step")
             op = int(msg.tensor("op")[0])
             if op == OP_END:
+                while inflight:
+                    _complete_one()
                 return
             epoch = int(msg.tensor("epoch")[0])
             lo, hi = int(msg.tensor("lo")[0]), int(msg.tensor("hi")[0])
@@ -509,12 +607,24 @@ class Driver:
                 rows = perm[lo:hi]
                 if self.role == "arbiter":
                     self.proto.arbiter_round(self.global_step)
-                else:
+                    self.global_step += 1
+                    self._pos = (epoch, -1)
+                    self._invoke("on_batch_end", self.global_step - 1,
+                                 epoch, None)
+                elif not pipelined:
                     self.proto.on_batch_member(rows, self.global_step)
-                self.global_step += 1
-                self._pos = (epoch, -1)   # members don't track batch idx
-                self._invoke("on_batch_end", self.global_step - 1, epoch,
-                             None)
+                    self.global_step += 1
+                    self._pos = (epoch, -1)   # members don't track batch
+                    self._invoke("on_batch_end", self.global_step - 1,
+                                 epoch, None)
+                else:
+                    while len(inflight) >= depth:
+                        _complete_one()
+                    ctx = self.proto.member_stage_send(rows,
+                                                       self.global_step)
+                    inflight.append((rows, self.global_step, epoch, ctx))
+                    self.global_step += 1
+                    self._pos = (epoch, -1)
             elif op == OP_EVAL:
                 if self.role != "arbiter":
                     rows = self.ch.recv("master",

@@ -32,6 +32,7 @@ schema.message("linreg/pred_z", {"z": Field("float64", 2)}, stepped=True,
 @base.register
 class LinRegProtocol(VFLProtocol):
     name = "linreg"
+    supports_pipeline = True
 
     def setup(self) -> None:
         ch, d = self.ch, self.data
@@ -59,15 +60,21 @@ class LinRegProtocol(VFLProtocol):
         for msg in ch.gather(ch.members, "linreg/z"):
             zb += msg.tensor("z")
         r = (zb - self.y[rows]) / len(rows)
-        ch.broadcast("linreg/resid", {"r": r}, targets=ch.members)
+        # async broadcast: the residual is snapshotted at encode time,
+        # so the in-place weight update below can't race the wire write
+        ch.broadcast("linreg/resid", {"r": r}, targets=ch.members,
+                     wait=False)
         if self.x is not None:
             self.w -= cfg.lr * (self.x[rows].T @ r + cfg.l2 * self.w)
         return float(0.5 * np.mean((zb - self.y[rows]) ** 2))
 
-    def on_batch_member(self, rows, step) -> None:
-        cfg, ch = self.cfg, self.ch
-        ch.send("master", "linreg/z", {"z": self.x[rows] @ self.w})
-        r = ch.recv("master", "linreg/resid").tensor("r")
+    def member_stage_send(self, rows, step):
+        self.ch.isend("master", "linreg/z", {"z": self.x[rows] @ self.w})
+        return None
+
+    def member_stage_recv(self, rows, step, ctx) -> None:
+        cfg = self.cfg
+        r = self.ch.recv("master", "linreg/resid").tensor("r")
         self.w -= cfg.lr * (self.x[rows].T @ r + cfg.l2 * self.w)
 
     # -- predict/serve -------------------------------------------------------

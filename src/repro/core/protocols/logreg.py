@@ -68,6 +68,7 @@ def _sigmoid(z):
 class LogRegHEProtocol(VFLProtocol):
     name = "logreg_he"
     needs_arbiter = True
+    supports_pipeline = True
 
     def setup(self) -> None:
         cfg, ch = self.cfg, self.ch
@@ -116,9 +117,12 @@ class LogRegHEProtocol(VFLProtocol):
         r_int = he.encode_fixed(r[:, 0])
         enc_r = [self.pub.encrypt_int(int(v), rn=self.pool.take())
                  for v in r_int]
+        # async broadcast: the heavy member-side homomorphic matvec for
+        # this round overlaps the master's next-round logit gather and
+        # encryption instead of serializing behind the wire write
         ch.broadcast("logreg/enc_resid",
                      {"r": codec.ints_to_u8(enc_r, self.width)},
-                     targets=ch.members,
+                     targets=ch.members, wait=False,
                      meta={"width": str(self.width),
                            "rb": str(max(1, int(np.abs(r_int).max())))})
         if self.x is not None:
@@ -128,9 +132,12 @@ class LogRegHEProtocol(VFLProtocol):
         return float(-np.mean(yb * np.log(p + eps)
                               + (1 - yb) * np.log(1 - p + eps)))
 
-    def on_batch_member(self, rows, step) -> None:
+    def member_stage_send(self, rows, step):
+        self.ch.isend("master", "logreg/z", {"z": self.x[rows] @ self.w})
+        return None
+
+    def member_stage_recv(self, rows, step, ctx) -> None:
         cfg, ch = self.cfg, self.ch
-        ch.send("master", "logreg/z", {"z": self.x[rows] @ self.w})
         msg = ch.recv("master", "logreg/enc_resid")
         enc_r = codec.u8_to_ints(msg.tensor("r"))
         packed = None

@@ -33,12 +33,16 @@ from repro.comm.schema import Field
 from repro.core.protocols import base
 from repro.core.protocols.driver import VFLProtocol
 
-# activations/gradients are free-form (fields flip between {u|du} and
-# {q, scale} when int8 exchange compression is on), so only the tag
-# sequencing is schema-managed for these two.
-schema.message("splitnn/u", None, stepped=True,
-               doc="member bottom activations (raw f32 or int8+scale)")
-schema.message("splitnn/du", None, stepped=True,
+# activation/gradient exchanges declare compress=True: when the channel
+# is built with compression on (cfg.compress), payloads ride as int8 +
+# per-column scale with error feedback — entirely below the protocol,
+# which always sees float32 tensors (DESIGN.md §7). Predict queries stay
+# exempt so serving fidelity never depends on the training-path knob.
+schema.message("splitnn/u", {"u": Field("float32", 2)}, stepped=True,
+               compress=True,
+               doc="member bottom activations for one training round")
+schema.message("splitnn/du", {"du": Field("float32", 2)}, stepped=True,
+               compress=True,
                doc="embedding gradient returned to one member")
 schema.message("splitnn/pred_u", {"u": Field("float32", 2)}, stepped=True,
                doc="bottom activations for a predict query")
@@ -102,11 +106,10 @@ def _member_bwd(params, x, du, lr):
 @base.register
 class SplitNNProtocol(VFLProtocol):
     name = "split_nn"
+    supports_pipeline = True
 
     def setup(self) -> None:
-        from repro.core import compression
         cfg, d = self.cfg, self.data
-        self.ef = compression.ErrorFeedback()
         self.lr = jnp.float32(cfg.lr)
         key = jax.random.key(cfg.seed)
         if self.is_master:
@@ -143,44 +146,34 @@ class SplitNNProtocol(VFLProtocol):
                                              self.ch.members)
 
     def on_batch_master(self, rows, step) -> float:
-        from repro.core import compression
-        cfg, ch = self.cfg, self.ch
+        ch = self.ch
         msgs = ch.gather(ch.members, "splitnn/u")
-        if cfg.compress:
-            u_members = tuple(
-                jnp.asarray(compression.unpack(m.payload), jnp.float32)
-                for m in msgs)
-        else:
-            u_members = tuple(jnp.asarray(m.tensor("u"), jnp.float32)
-                              for m in msgs)
+        u_members = tuple(jnp.asarray(m.tensor("u"), jnp.float32)
+                          for m in msgs)
         loss, self.top, self.bottom, g_u = _master_fwd_bwd(
             self.top, self.bottom, u_members, self.x[rows], self.y[rows],
             self.lr)
         for mname, du in zip(ch.members, g_u):
-            if cfg.compress:
-                q, scale = self.ef.compress(mname, np.asarray(du))
-                ch.send(mname, "splitnn/du", compression.payload(q, scale))
-            else:
-                ch.send(mname, "splitnn/du", {"du": np.asarray(du)})
+            # isend: the per-member gradient writes overlap each other
+            # and the next round's activation gather
+            ch.isend(mname, "splitnn/du", {"du": np.asarray(du)})
         return float(loss)
 
-    def on_batch_member(self, rows, step) -> None:
-        from repro.core import compression
-        cfg, ch = self.cfg, self.ch
+    def member_stage_send(self, rows, step):
+        """Bottom forward + activation isend; the batch slice is the ctx
+        the deferred backward stage reuses (its VJP must see the inputs
+        this forward actually saw)."""
         xb = self.x[rows]
         u = _member_fwd(self.params, xb)
         if self.masker is not None:
             u = jnp.asarray(np.asarray(u)
                             + self.masker.mask(step, np.asarray(u).shape))
-        if cfg.compress:
-            q, scale = self.ef.compress("u", np.asarray(u))
-            ch.send("master", "splitnn/u", compression.payload(q, scale))
-            du = jnp.asarray(compression.unpack(
-                ch.recv("master", "splitnn/du").payload), jnp.float32)
-        else:
-            ch.send("master", "splitnn/u", {"u": np.asarray(u)})
-            du = jnp.asarray(
-                ch.recv("master", "splitnn/du").tensor("du"), jnp.float32)
+        self.ch.isend("master", "splitnn/u", {"u": np.asarray(u)})
+        return xb
+
+    def member_stage_recv(self, rows, step, xb) -> None:
+        du = jnp.asarray(
+            self.ch.recv("master", "splitnn/du").tensor("du"), jnp.float32)
         self.params = _member_bwd(self.params, xb, du, self.lr)
 
     # -- predict/serve -------------------------------------------------------
@@ -212,13 +205,19 @@ class SplitNNProtocol(VFLProtocol):
                     "order": self.order}
         return {"params": jax.tree.map(np.asarray, self.params)}
 
+    def _ef_residuals(self) -> Dict:
+        # error feedback now lives on the typed channel (schema-level
+        # compression); its residuals are part of this role's state
+        ef = self.ch.error_feedback
+        return dict(ef.residuals) if ef is not None else {}
+
     def state_dict(self) -> Dict:
         if self.is_master:
             return {"top": jax.tree.map(np.asarray, self.top),
                     "bottom": jax.tree.map(np.asarray, self.bottom),
-                    "ef": dict(self.ef.residuals)}
+                    "ef": self._ef_residuals()}
         return {"params": jax.tree.map(np.asarray, self.params),
-                "ef": dict(self.ef.residuals)}
+                "ef": self._ef_residuals()}
 
     def load_state_dict(self, state) -> None:
         as_jax = functools.partial(jax.tree.map, jnp.asarray)
@@ -227,4 +226,19 @@ class SplitNNProtocol(VFLProtocol):
             self.bottom = as_jax(state["bottom"])
         else:
             self.params = as_jax(state["params"])
-        self.ef.residuals = dict(state["ef"])
+        if state.get("ef"):
+            from repro.core import compression
+            # migrate pre-§7 checkpoints: the protocol-owned EF keyed
+            # streams as "u" (member) / member name (master); channel
+            # EF keys are "{to}/{msg-type}/{field}"
+            residuals = {}
+            for k, v in state["ef"].items():
+                if "/" in k:
+                    residuals[k] = v
+                elif k == "u":
+                    residuals["master/splitnn/u/u"] = v
+                else:
+                    residuals[f"{k}/splitnn/du/du"] = v
+            if self.ch.error_feedback is None:
+                self.ch.error_feedback = compression.ErrorFeedback()
+            self.ch.error_feedback.residuals = residuals

@@ -1,0 +1,485 @@
+"""Async exchange engine (DESIGN.md §7): transport futures and FIFO
+ordering, schema-level frame coalescing + reorder, channel-declared
+compression, and the pipelined driver — depth 1 must reproduce the
+recorded seed traces bit-identically in every execution mode, depth
+>= 2 must honor the bounded-staleness guarantee and still converge."""
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm import schema
+from repro.comm.local import ThreadBus
+from repro.comm.schema import Field, TypedChannel
+from repro.core.party import VFLJob, run_vfl
+from repro.core.protocols.base import VFLConfig, register
+from repro.core.protocols.driver import EarlyStopping, StopAtStep
+from repro.core.protocols.linreg import LinRegProtocol
+from repro.core.protocols.split_nn import SplitNNProtocol
+from repro.data.vertical import vertical_partition
+
+TRACES = json.loads(
+    (pathlib.Path(__file__).parent / "fixtures" / "seed_traces.json")
+    .read_text())
+
+
+def _dataset(n=192, d=12, items=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, items))
+    y = x @ w * 0.4 + rng.normal(scale=0.05, size=(n, items))
+    ids = [f"u{i:05d}" for i in range(n)]
+    return ids, x, y
+
+
+def _linreg_case():
+    ids, x, y = _dataset()
+    master, members = vertical_partition(ids, x, y, widths=[4, 3],
+                                         overlap=1.0, seed=1)
+    cfg = VFLConfig(protocol="linreg", epochs=3, batch_size=48, lr=0.1,
+                    seed=0, use_psi=False)
+    return cfg, master, members
+
+
+def _splitnn_case():
+    ids, x, y = _dataset(n=128, d=12, items=3)
+    yb = (y > 0).astype(np.float64)
+    master, members = vertical_partition(ids, x, yb, widths=[5], seed=3)
+    cfg = VFLConfig(protocol="split_nn", epochs=3, batch_size=32, lr=0.1,
+                    seed=0, use_psi=False, embedding_dim=8, hidden=(16,))
+    return cfg, master, members
+
+
+# ---------------------------------------------------------------------------
+# transport layer: isend/irecv futures, FIFO, stats
+# ---------------------------------------------------------------------------
+
+
+def test_isend_futures_resolve_and_meter():
+    bus = ThreadBus(["a", "b"])
+    ca, cb = bus.communicator("a"), bus.communicator("b")
+    futs = [ca.isend("b", f"t{i}", {"x": np.full(3, float(i))})
+            for i in range(4)]
+    for f in futs:
+        f.result(5.0)
+        assert f.done()
+    for i in range(4):
+        assert cb.recv("a", f"t{i}").tensor("x")[0] == i
+    s = ca.stats.as_dict()
+    assert s["async_sends"] == 4 and s["sent_messages"] == 4
+    assert s["wire_s"] >= 0 and s["queued_s"] >= 0
+
+
+def test_blocking_send_interleaves_fifo_with_isend():
+    """A blocking send issued while async sends are queued must land
+    AFTER them on the wire (one FIFO per transport)."""
+    bus = ThreadBus(["a", "b"])
+    ca, cb = bus.communicator("a"), bus.communicator("b")
+    for i in range(20):
+        ca.isend("b", "s", {"x": np.array([float(i)])})
+    ca.send("b", "last", {"x": np.array([99.0])})
+    seen = [cb.recv("a", "s").tensor("x")[0] for _ in range(20)]
+    assert seen == list(map(float, range(20)))
+    assert cb.recv("a", "last").tensor("x")[0] == 99.0
+
+
+def test_irecv_is_lazy_and_peekable():
+    bus = ThreadBus(["a", "b"])
+    ca, cb = bus.communicator("a"), bus.communicator("b")
+    fut = cb.irecv("a", "later")
+    assert not fut.done()
+    ca.send("b", "later", {"x": np.array([1.0])})
+    deadline = time.monotonic() + 5
+    while not fut.done() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert fut.done()
+    assert fut.result(1.0).tensor("x")[0] == 1.0
+    # result is idempotent
+    assert fut.result(1.0).tensor("x")[0] == 1.0
+
+
+def test_send_error_surfaces_on_next_op():
+    class Boom(Exception):
+        pass
+
+    bus = ThreadBus(["a", "b"])
+    ca = bus.communicator("a")
+
+    def bad_send(msg, raw):
+        raise Boom("wire down")
+    ca._send = bad_send
+    fut = ca.isend("b", "t", {"x": np.zeros(1)})
+    with pytest.raises(Boom):
+        fut.result(5.0)
+    with pytest.raises(Boom):        # sticky: the engine never rearms
+        ca.isend("b", "t2", {"x": np.zeros(1)})
+    with pytest.raises(Boom):
+        ca.send("b", "t3", {"x": np.zeros(1)})
+
+
+# ---------------------------------------------------------------------------
+# schema layer: frames, reordering, channel compression
+# ---------------------------------------------------------------------------
+
+schema.message("ae/a", {"v": Field("float64", 1)}, stepped=True)
+schema.message("ae/b", {"w": Field("int64", 1)}, stepped=True)
+schema.message("ae/comp", {"u": Field("float32", 2)}, stepped=True,
+               compress=True)
+
+
+def _pair(compress=False):
+    bus = ThreadBus(["m", "p"])
+    return (TypedChannel(bus.communicator("m"), compress=compress),
+            TypedChannel(bus.communicator("p"), compress=compress))
+
+
+def test_frame_coalesces_one_wire_message():
+    a, b = _pair()
+    with a.frame("p"):
+        a.send("p", "ae/a", {"v": np.array([1.0])})
+        a.send("p", "ae/b", {"w": np.array([7], np.int64)})
+    assert a.stats.sent_messages == 1          # ONE wire frame
+    # receiver unpacks transparently, in any recv order
+    assert b.recv("m", "ae/b").tensor("w")[0] == 7
+    assert b.recv("m", "ae/a").tensor("v")[0] == 1.0
+
+
+def test_frame_reorders_across_bare_messages():
+    a, b = _pair()
+    with a.frame("p"):
+        a.send("p", "ae/a", {"v": np.array([0.0])})   # seq 0 in frame
+        a.send("p", "ae/b", {"w": np.array([5], np.int64)})
+    a.send("p", "ae/a", {"v": np.array([1.0])})       # seq 1 bare
+    # sequence order is preserved per channel even though seq 0 rides a
+    # frame and seq 1 rides bare
+    assert b.recv("m", "ae/a").tensor("v")[0] == 0.0
+    assert b.recv("m", "ae/a").tensor("v")[0] == 1.0
+    assert b.recv("m", "ae/b").tensor("w")[0] == 5
+
+
+def test_single_message_frame_stays_bare():
+    a, b = _pair()
+    with a.frame("p"):
+        a.send("p", "ae/a", {"v": np.array([2.0])})
+    msg = b.recv("m", "ae/a")
+    assert msg.tag == "ae/a/0" and msg.tensor("v")[0] == 2.0
+
+
+def test_channel_compression_roundtrip_and_exemption():
+    a, b = _pair(compress=True)
+    u = np.linspace(-2, 2, 64 * 32).reshape(64, 32).astype(np.float32)
+    a.send("p", "ae/comp", {"u": u})
+    got = b.recv("m", "ae/comp").tensor("u")
+    assert got.dtype == np.float32
+    assert np.abs(got - u).max() <= np.abs(u).max() / 127.0 * 0.5 + 1e-6
+    # non-declared channels are exempt even on a compressing channel
+    a.send("p", "ae/a", {"v": np.array([0.125])})
+    assert b.recv("m", "ae/a").tensor("v")[0] == 0.125
+    # compressing channel is ~4x smaller on the wire than a plain one
+    ap, bp = _pair(compress=False)
+    ap.send("p", "ae/comp", {"u": u})
+    bp.recv("m", "ae/comp")
+    assert a.stats.per_tag_bytes["ae/comp/0"] < \
+        ap.stats.per_tag_bytes["ae/comp/0"] / 2.5
+
+
+def test_compression_error_feedback_accumulates_on_channel():
+    a, b = _pair(compress=True)
+    rng = np.random.default_rng(0)
+    total_true = np.zeros((4, 4), np.float32)
+    total_got = np.zeros((4, 4), np.float32)
+    for _ in range(40):
+        u = rng.normal(size=(4, 4)).astype(np.float32)
+        a.send("p", "ae/comp", {"u": u})
+        total_true += u
+        total_got += b.recv("m", "ae/comp").tensor("u")
+    assert a.error_feedback is not None
+    # error feedback keeps the accumulated signal unbiased
+    assert np.abs(total_true - total_got).max() < 0.2
+
+
+# ---------------------------------------------------------------------------
+# driver: depth-1 trace equivalence in all three execution modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["thread", "socket", "process",
+                                  "socket_proc"])
+def test_depth1_linreg_bit_identical_all_modes(mode):
+    """pipeline_depth=1 must reproduce the recorded seed traces
+    bit-identically — the async engine under the hood changes nothing
+    about lock-step arithmetic."""
+    cfg, master, members = _linreg_case()
+    cfg = dataclasses.replace(cfg, pipeline_depth=1)
+    res = run_vfl(cfg, master, members, mode=mode)
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["linreg"]["losses"], rtol=0, atol=0)
+    np.testing.assert_allclose(res["master"]["w_master"],
+                               TRACES["linreg"]["w_master"],
+                               rtol=0, atol=0)
+    for j in range(2):
+        np.testing.assert_allclose(res[f"member{j}"]["w"],
+                                   TRACES["linreg"]["w_members"][j],
+                                   rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("mode", ["thread", "socket"])
+def test_depth1_splitnn_matches_trace(mode):
+    cfg, master, members = _splitnn_case()
+    cfg = dataclasses.replace(cfg, pipeline_depth=1)
+    res = run_vfl(cfg, master, members, mode=mode)
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["split_nn"]["losses"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# driver: bounded staleness at depth >= 2
+# ---------------------------------------------------------------------------
+
+
+@register
+class _StalenessProbe(LinRegProtocol):
+    """Records, at each send stage, how many gradient applications the
+    member is behind the step it is computing."""
+
+    name = "staleness_probe"
+
+    def setup(self):
+        super().setup()
+        self.applied = 0
+        self.staleness = []
+
+    def member_stage_send(self, rows, step):
+        # a synchronous member would have applied `step` updates by now
+        self.staleness.append(step - self.applied)
+        return super().member_stage_send(rows, step)
+
+    def member_stage_recv(self, rows, step, ctx):
+        super().member_stage_recv(rows, step, ctx)
+        self.applied += 1
+
+    def finalize(self):
+        out = super().finalize()
+        if self.is_member:
+            out["staleness"] = list(self.staleness)
+        return out
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_staleness_bounded_by_depth_minus_one(depth):
+    cfg, master, members = _linreg_case()
+    cfg = dataclasses.replace(cfg, protocol="staleness_probe")
+    res = run_vfl(cfg, master, members, pipeline_depth=depth)
+    for j in range(2):
+        st = res[f"member{j}"]["staleness"]
+        assert len(st) == len(res["master"]["history"])
+        assert max(st) <= depth - 1, (depth, st)
+        if depth > 1:
+            assert max(st) == depth - 1      # pipeline actually fills
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_bounded_staleness_convergence(depth):
+    """The documented async-VFL scenario: training with gradients up to
+    depth-1 steps stale still converges on both protocol families."""
+    cfg, master, members = _linreg_case()
+    sync = run_vfl(cfg, master, members)
+    res = run_vfl(cfg, master, members, pipeline_depth=depth)
+    h = [r["loss"] for r in res["master"]["history"]]
+    h_sync = [r["loss"] for r in sync["master"]["history"]]
+    assert len(h) == len(h_sync)
+    assert h[-1] < 0.25 * h[0], h              # trains
+    assert h[-1] < 2.0 * h_sync[-1]            # comparable to sync
+
+    cfg2, m2, mem2 = _splitnn_case()
+    res2 = run_vfl(cfg2, m2, mem2, pipeline_depth=depth)
+    h2 = [r["loss"] for r in res2["master"]["history"]]
+    sync2 = run_vfl(cfg2, m2, mem2)
+    hs2 = [r["loss"] for r in sync2["master"]["history"]]
+    assert h2[-1] < h2[0]
+    assert abs(h2[-1] - hs2[-1]) < 0.1, (h2[-1], hs2[-1])
+
+
+def test_logreg_he_pipelined_with_arbiter():
+    """The arbitered HE protocol runs at depth 2: the master's
+    encryption of round t+1 overlaps the members' homomorphic matvec
+    and the arbiter's decryption of round t."""
+    ids, x, y = _dataset(n=64, d=8, items=1)
+    yb = (y > 0).astype(np.float64)
+    master, members = vertical_partition(ids, x, yb, widths=[3], seed=4)
+    cfg = VFLConfig(protocol="logreg_he", epochs=2, batch_size=32,
+                    lr=0.5, seed=0, use_psi=False, he_bits=256)
+    res = run_vfl(cfg, master, members, pipeline_depth=2)
+    h = [r["loss"] for r in res["master"]["history"]]
+    assert h[-1] < h[0]
+    assert res["arbiter"]["decrypted_values"] > 0
+
+
+# ---------------------------------------------------------------------------
+# driver: stop semantics, eval-during-fit, predict at depth >= 2
+# ---------------------------------------------------------------------------
+
+
+def test_early_stop_overshoot_bounded_by_window():
+    """A stop request only halts NEW announcements: every announced
+    round still runs (so no follower hangs), which bounds the overshoot
+    at depth-1 extra steps."""
+    cfg, master, members = _linreg_case()
+    res = run_vfl(cfg, master, members, callbacks=[StopAtStep(5)],
+                  pipeline_depth=4)
+    n_steps = len(res["master"]["history"])
+    assert 5 <= n_steps <= 5 + 3, n_steps
+    assert res["master"]["stopped"]
+
+
+def test_early_stopping_callback_completes_at_depth():
+    cfg, master, members = _linreg_case()
+    t0 = time.monotonic()
+    res = run_vfl(cfg, master, members,
+                  callbacks=[EarlyStopping(patience=2, min_delta=10.0)],
+                  pipeline_depth=4)
+    assert time.monotonic() - t0 < 120
+    assert "early-stop" in res["master"]["stopped"]
+    assert 3 <= len(res["master"]["history"]) <= 6
+
+
+def test_predict_after_pipelined_fit_drains_cleanly():
+    """END drains every in-flight round, so a predict right after a
+    pipelined fit sees fully-updated members and serving stays pure."""
+    cfg, master, members = _splitnn_case()
+    with VFLJob(cfg, master, members, pipeline_depth=3) as job:
+        job.fit()
+        s1 = job.predict()
+        s2 = job.predict()
+    np.testing.assert_allclose(s1, s2, rtol=0, atol=0)
+    assert s1.shape[0] > 0
+
+
+def test_eval_during_pipelined_fit_no_deadlock():
+    from repro.core.protocols.driver import EvalEveryEpoch
+    cfg, master, members = _splitnn_case()
+    res = run_vfl(cfg, master, members, callbacks=[EvalEveryEpoch()],
+                  pipeline_depth=3)
+    assert len(res["master"]["eval_history"]) == cfg.epochs
+
+
+def test_depth1_via_stage_hooks_equals_on_batch_member():
+    """on_batch_member == stage_send + stage_recv by construction: the
+    probe protocol (pipelined hooks) at depth 1 reproduces the linreg
+    seed trace exactly."""
+    cfg, master, members = _linreg_case()
+    cfg = dataclasses.replace(cfg, protocol="staleness_probe")
+    res = run_vfl(cfg, master, members, pipeline_depth=1)
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["linreg"]["losses"], rtol=0, atol=0)
+    for j in range(2):
+        np.testing.assert_allclose(res[f"member{j}"]["w"],
+                                   TRACES["linreg"]["w_members"][j],
+                                   rtol=0, atol=0)
+
+
+def test_pipelined_socket_mode_trains():
+    """Socket transport + depth 2 end-to-end (threads-in-one-process
+    deployment): arithmetic unaffected by the transport."""
+    cfg, master, members = _splitnn_case()
+    ref = run_vfl(cfg, master, members, mode="thread", pipeline_depth=2)
+    got = run_vfl(cfg, master, members, mode="socket", pipeline_depth=2)
+    np.testing.assert_allclose(
+        [h["loss"] for h in got["master"]["history"]],
+        [h["loss"] for h in ref["master"]["history"]], rtol=1e-6)
+
+
+def test_sender_stops_writing_after_wire_error():
+    """After one failed write the engine must never write again (a
+    partial frame would corrupt the length-prefixed stream): queued
+    sends fail fast with the original error."""
+    class Boom(Exception):
+        pass
+
+    bus = ThreadBus(["a", "b"])
+    ca = bus.communicator("a")
+    writes = []
+    orig = ca._send
+
+    def fail_once(msg, raw):
+        if not writes:
+            writes.append(msg.tag)
+            raise Boom("partial write")
+        orig(msg, raw)
+    ca._send = fail_once
+    f1 = ca.isend("b", "t1", {"x": np.zeros(1)})
+    f2 = ca.isend("b", "t2", {"x": np.zeros(1)})
+    with pytest.raises(Boom):
+        f1.result(5.0)
+    with pytest.raises(Boom):
+        f2.result(5.0)
+    assert writes == ["t1"]            # t2 never hit the wire
+
+
+def test_pending_and_reorder_buffers_do_not_leak():
+    """Stepped tags are unique per step: drained bookkeeping entries
+    must be deleted, or a long fit/serve leaks one per step."""
+    a, b = _pair()
+    for i in range(50):
+        with a.frame("p"):
+            a.send("p", "ae/a", {"v": np.array([float(i)])})
+            a.send("p", "ae/b", {"w": np.array([i], np.int64)})
+        b.recv("m", "ae/a")
+        b.recv("m", "ae/b")
+    assert sum(len(v) for v in b._reorder.values()) == 0
+    assert len(b.comm._pending) == 0
+
+
+def test_mid_fit_eval_with_sync_protocol_at_depth():
+    """A non-pipeline protocol at pipeline_depth>=2 must not deadlock
+    when a callback runs a mid-fit eval: the master's window collapses
+    to 1 for protocols without stage hooks."""
+    from repro.core.protocols.driver import EvalEveryEpoch
+
+    @register
+    class _SyncOnly(LinRegProtocol):
+        name = "sync_only"
+        supports_pipeline = False
+
+        def on_batch_member(self, rows, step):
+            ctx = self.member_stage_send(rows, step)
+            self.member_stage_recv(rows, step, ctx)
+
+    cfg, master, members = _linreg_case()
+    cfg = dataclasses.replace(cfg, protocol="sync_only", epochs=2)
+    t0 = time.monotonic()
+    res = run_vfl(cfg, master, members, callbacks=[EvalEveryEpoch()],
+                  pipeline_depth=4)
+    assert time.monotonic() - t0 < 60
+    assert len(res["master"]["eval_history"]) == 2
+    # collapsed to lock-step: the first two epochs match the seed trace
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["linreg"]["losses"][:8], rtol=0, atol=0)
+
+
+def test_unsupported_protocol_falls_back_synchronous():
+    """A protocol without stage hooks keeps working at depth >= 2: its
+    members simply execute each round in place (no run-ahead)."""
+
+    @register
+    class _LegacyMember(SplitNNProtocol):
+        name = "legacy_member"
+        supports_pipeline = False
+
+        def on_batch_member(self, rows, step):
+            xb = self.member_stage_send(rows, step)
+            self.member_stage_recv(rows, step, xb)
+
+    cfg, master, members = _splitnn_case()
+    cfg = dataclasses.replace(cfg, protocol="legacy_member")
+    res = run_vfl(cfg, master, members, pipeline_depth=4)
+    h = [r["loss"] for r in res["master"]["history"]]
+    np.testing.assert_allclose(h, TRACES["split_nn"]["losses"],
+                               rtol=1e-6)

@@ -1,0 +1,188 @@
+"""Socket transport framing edge cases: partial reads are reassembled,
+a connection dropping mid-frame surfaces a clean ``ConnectionError``
+(instead of hanging until the timeout), the per-message timeout is
+configurable and honored, and TCP_NODELAY is set on outbound links."""
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm import codec
+from repro.comm.sock import (SocketCommunicator, _recv_exact,
+                             local_addresses)
+
+
+def _wire_blob(sender: str, tag: str, payload) -> bytes:
+    raw = codec.encode({k: np.asarray(v) for k, v in payload.items()},
+                       {"sender": sender, "tag": tag})
+    return struct.pack("<Q", len(raw)) + raw
+
+
+def _hello(sender: str) -> bytes:
+    """Connection hello: first frame on a link is the peer's agent id."""
+    b = sender.encode()
+    return struct.pack("<Q", len(b)) + b
+
+
+def test_partial_reads_reassembled():
+    """A frame dribbled in tiny chunks with pauses must still decode:
+    _recv_exact loops until the byte count is satisfied."""
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs, timeout=10.0)
+    try:
+        blob = _hello("a") + _wire_blob("a", "slow", {"x": np.arange(64.0)})
+        conn = socket.create_connection(addrs["b"])
+
+        def dribble():
+            for i in range(0, len(blob), 7):
+                conn.sendall(blob[i:i + 7])
+                time.sleep(0.001)
+        t = threading.Thread(target=dribble)
+        t.start()
+        msg = cb.recv("a", "slow")
+        t.join()
+        conn.close()
+        np.testing.assert_array_equal(msg.tensor("x"), np.arange(64.0))
+    finally:
+        cb.close()
+
+
+def test_recv_exact_raises_on_midframe_close():
+    srv = socket.create_server(("127.0.0.1", 0))
+    host, port = srv.getsockname()
+    out = socket.create_connection((host, port))
+    conn, _ = srv.accept()
+    out.sendall(b"abc")
+    out.close()
+    with pytest.raises(ConnectionError, match="mid-frame"):
+        _recv_exact(conn, 10)
+    conn.close()
+    srv.close()
+
+
+def test_connection_drop_midframe_raises_not_hangs():
+    """An established peer dying with half a frame on the wire must
+    fail the pending recv quickly and cleanly."""
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs, timeout=30.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        conn.sendall(_hello("a"))
+        conn.sendall(_wire_blob("a", "ok", {"x": np.zeros(2)}))
+        assert cb.recv("a", "ok").tag == "ok"       # sender established
+        # half a frame, then the peer dies
+        conn.sendall(struct.pack("<Q", 1 << 20) + b"only-the-start")
+        conn.close()
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "never")
+        assert time.monotonic() - t0 < 5            # not the 30s timeout
+    finally:
+        cb.close()
+
+
+def test_drop_during_first_data_frame_attributed_via_hello():
+    """Even a peer that dies mid-way through its VERY FIRST message is
+    identified (the connection hello names it) and fails waiters fast."""
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs, timeout=30.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        conn.sendall(_hello("a"))
+        conn.sendall(struct.pack("<Q", 1 << 20) + b"partial-first")
+        conn.close()
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "anything")
+        assert time.monotonic() - t0 < 5
+    finally:
+        cb.close()
+
+
+def test_drop_inside_length_prefix_raises_not_hangs():
+    """A drop with only part of the 8-byte length prefix delivered is
+    still a mid-frame death, not a clean close."""
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs, timeout=30.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        conn.sendall(_hello("a"))
+        conn.sendall(_wire_blob("a", "ok", {"x": np.zeros(2)}))
+        assert cb.recv("a", "ok").tag == "ok"
+        conn.sendall(b"\x03\x00\x00")               # 3 of 8 prefix bytes
+        conn.close()
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "never")
+        assert time.monotonic() - t0 < 5
+    finally:
+        cb.close()
+
+
+def test_clean_close_between_frames_is_not_an_error():
+    """A peer closing its socket at a frame boundary (normal shutdown)
+    must not poison recvs of already-delivered messages."""
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs, timeout=5.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        conn.sendall(_hello("a"))
+        conn.sendall(_wire_blob("a", "t0", {"x": np.ones(3)}))
+        conn.sendall(_wire_blob("a", "t1", {"x": np.ones(3) * 2}))
+        conn.close()                                # boundary close
+        assert cb.recv("a", "t0").tensor("x")[0] == 1
+        assert cb.recv("a", "t1").tensor("x")[0] == 2
+    finally:
+        cb.close()
+
+
+def test_timeout_configurable_and_honored():
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs, timeout=0.3)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            cb.recv("a", "nothing")
+        dt = time.monotonic() - t0
+        assert 0.2 <= dt < 2.0, dt
+        # per-call override beats the constructor default
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            cb.recv("a", "nothing", timeout=0.8)
+        assert time.monotonic() - t0 >= 0.7
+    finally:
+        cb.close()
+
+
+def test_tcp_nodelay_set_on_outbound():
+    addrs = local_addresses(["a", "b"])
+    ca = SocketCommunicator("a", addrs)
+    cb = SocketCommunicator("b", addrs)
+    try:
+        ca.send("b", "t", {"x": np.zeros(1)})
+        assert ca._out["b"].getsockopt(socket.IPPROTO_TCP,
+                                       socket.TCP_NODELAY) == 1
+        cb.recv("a", "t")
+        off = SocketCommunicator("a", local_addresses(["a"]),
+                                 nodelay=False)
+        off.close()
+    finally:
+        ca.close(); cb.close()
+
+
+def test_large_frame_two_part_send_roundtrips():
+    """Bodies above the inline threshold go out as prefix + body (no
+    concat copy); the receiver sees one coherent frame."""
+    addrs = local_addresses(["a", "b"])
+    ca = SocketCommunicator("a", addrs)
+    cb = SocketCommunicator("b", addrs)
+    try:
+        big = np.random.default_rng(0).normal(size=(256, 256))  # 512 KiB
+        ca.send("b", "big", {"x": big})
+        np.testing.assert_array_equal(cb.recv("a", "big").tensor("x"),
+                                      big)
+    finally:
+        ca.close(); cb.close()
