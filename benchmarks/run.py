@@ -109,6 +109,53 @@ def bench_comm_modes():
          f"speedup_x{rows[False] / max(rows[True], 1e-9):.2f}"
          f" (loopback; guards WAN delayed-ACK stalls)")
 
+    # gRPC-framed transport vs length-prefix framing: same safetensors
+    # payloads, HTTP/2-like frames (DESIGN.md §8.1)
+    from repro.comm.grpc import GrpcCommunicator
+    addrs = local_addresses(["a", "b"])
+    ca = GrpcCommunicator("a", addrs)
+    cb = GrpcCommunicator("b", addrs)
+    try:
+        us = roundtrip(ca, cb, payload)
+        emit("comm_roundtrip_grpc_256KiB", us, "mode=grpc")
+    finally:
+        ca.close(); cb.close()
+
+
+def bench_encode_offload():
+    """Caller-visible isend cost: inline encode vs sender-thread encode
+    offload (DESIGN.md §8.3). The offload row measures what the
+    master's critical path actually pays per isend — the snapshot copy
+    — instead of the full safetensors serialization. Interleaved,
+    min-over-reps (2-core host, noisy)."""
+    from repro.comm.base import CommCfg
+    from repro.comm.local import ThreadBus
+
+    payload = {"x": np.random.default_rng(0).normal(size=(1024, 512))}
+    pairs = {}
+    for offload in (False, True):
+        bus = ThreadBus(["a", "b"])
+        ca = bus.communicator(
+            "a", comm_cfg=CommCfg(encode_offload=offload))
+        cb = bus.communicator("b")
+        ca.isend("b", "w", payload).result(30)     # warm the sender
+        cb.recv("a", "w")
+        pairs[offload] = (ca, cb)
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(3):
+        for offload, (ca, cb) in pairs.items():
+            t0 = time.perf_counter()
+            fut = ca.isend("b", "t", payload)
+            dt = (time.perf_counter() - t0) * 1e6
+            fut.result(30)
+            cb.recv("a", "t")
+            best[offload] = min(best[offload], dt)
+    emit("comm_isend_encode_inline", best[False],
+         "payload=4MiB caller-blocked-us")
+    emit("comm_isend_encode_offload", best[True],
+         f"payload=4MiB caller-blocked-us "
+         f"speedup_x{best[False] / max(best[True], 1e-9):.2f}")
+
 
 def bench_table1_demo(quick: bool):
     from repro.configs.vfl_recsys import VFLRecsysConfig
@@ -455,6 +502,9 @@ def bench_vfl_async(quick: bool):
     uncapped, 4 XLA thread pools thrash this host's 2 cores and the
     measurement is noise). Steady-state per-step time, first steps
     skipped (per-process jit compile + pipeline fill). Plus the
+    ``vfl_async_splitnn_wan_d*`` rows — the same workload under a
+    LinkSpec-shaped 40 ms-RTT link (DESIGN.md §8.2), where the
+    pipeline-depth win is measurable beyond loopback — and the
     logreg_he encryption-overlap rows: master Paillier encryption,
     member homomorphic matvec and arbiter decryption in parallel
     processes."""
@@ -500,6 +550,33 @@ def bench_vfl_async(quick: bool):
                 f" speedup_x{per_step[1] / max(us, 1e-9):.2f}"
             emit(f"vfl_async_splitnn_socket_d{depth}", us,
                  f"{info[depth]} mode=socket_proc{extra}")
+
+        # WAN emulation (DESIGN.md §8.2): the same exchange-dominated
+        # split-NN over the gRPC-framed transport with LinkSpec 20 ms
+        # one-way latency (40 ms RTT) on every link. Depth 1 pays
+        # RTT + compute per step, serialized; depth >= 2 overlaps the
+        # in-flight exchange with the master's round, which is where
+        # the pipeline win becomes visible beyond loopback.
+        # Threads-in-one-process (mode="grpc") keeps process-spawn cost
+        # out of the short runs; the RTT dwarfs the GIL.
+        from repro.comm.base import CommCfg, LinkSpec
+        wan = CommCfg(link=LinkSpec(latency_ms=20.0))
+        wan_step = {1: float("inf"), 2: float("inf"), 4: float("inf")}
+        wan_info = {}
+        for _ in range(1 if quick else 2):
+            for depth in wan_step:
+                res = run_vfl(cfg, master, members, mode="grpc",
+                              pipeline_depth=depth, comm_cfg=wan)
+                h = res["master"]["history"]
+                wan_step[depth] = min(wan_step[depth],
+                                      _steady_us(h, skip=4))
+                wan_info[depth] = f"steps={len(h)} " \
+                                  f"loss={h[-1]['loss']:.4f}"
+        for depth, us in wan_step.items():
+            extra = "" if depth == 1 else \
+                f" speedup_x{wan_step[1] / max(us, 1e-9):.2f}"
+            emit(f"vfl_async_splitnn_wan_d{depth}", us,
+                 f"{wan_info[depth]} rtt_ms=40 mode=grpc{extra}")
 
         yb = y[:, :1]
         m1, mem1 = vertical_partition(ids[:1024], x[:1024], yb[:1024],
@@ -579,6 +656,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_codec()
     bench_comm_modes()
+    bench_encode_offload()
     bench_table1_demo(args.quick)
     bench_he()
     bench_he_packed(args.quick)

@@ -1,0 +1,110 @@
+"""CI docs job: keep the user-facing docs honest.
+
+Three checks, any failure exits non-zero:
+
+1. **Quickstart executes** — every fenced python block preceded by a
+   ``<!-- docs-check: execute -->`` marker (README.md and docs/*.md)
+   runs in-process and must not raise.
+2. **Links resolve** — every intra-repo markdown link in tracked
+   markdown files must point at an existing file (anchors are
+   stripped; http(s) links are skipped).
+3. **API surface intact** — every symbol heading in the generated
+   docs/api.md (`### \`module.Symbol\``) must still import; a removed
+   public symbol fails CI until docs/gen_api.py is rerun (making the
+   removal a conscious diff).
+
+  PYTHONPATH=src python docs/check.py
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+MD_FILES = sorted(
+    list(ROOT.glob("*.md")) + list((ROOT / "docs").glob("*.md")))
+
+_EXEC_MARK = "<!-- docs-check: execute -->"
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_API_SYM = re.compile(r"^### `([\w.]+)\.(\w+)`", re.M)
+
+failures: list = []
+
+
+def check_snippets() -> int:
+    ran = 0
+    for md in MD_FILES:
+        text = md.read_text()
+        for m in _FENCE.finditer(text):
+            head = text[:m.start()].rstrip()
+            if not head.endswith(_EXEC_MARK):
+                continue
+            ran += 1
+            print(f"[snippet] executing block from {md.name} ...")
+            try:
+                exec(compile(m.group(1), f"{md.name}:snippet", "exec"),
+                     {"__name__": "__docs_check__"})
+            except BaseException:
+                failures.append(f"snippet in {md.name} raised:\n"
+                                f"{traceback.format_exc()}")
+    if ran == 0:
+        failures.append("no executable snippets found — the README "
+                        f"quickstart must carry {_EXEC_MARK!r}")
+    return ran
+
+
+def check_links() -> int:
+    n = 0
+    for md in MD_FILES:
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                     # pure in-page anchor
+                continue
+            n += 1
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                failures.append(f"{md.relative_to(ROOT)}: broken link "
+                                f"-> {target}")
+    return n
+
+
+def check_api_surface() -> int:
+    api = ROOT / "docs" / "api.md"
+    if not api.exists():
+        failures.append("docs/api.md missing — run docs/gen_api.py")
+        return 0
+    syms = _API_SYM.findall(api.read_text())
+    if not syms:
+        failures.append("docs/api.md lists no symbols — regenerate it")
+    for modname, name in syms:
+        try:
+            mod = importlib.import_module(modname)
+        except ImportError as e:
+            failures.append(f"api.md module {modname} gone: {e}")
+            continue
+        if not hasattr(mod, name):
+            failures.append(f"public symbol {modname}.{name} listed in "
+                            f"docs/api.md no longer exists")
+    return len(syms)
+
+
+def main() -> None:
+    n_snip = check_snippets()
+    n_links = check_links()
+    n_syms = check_api_surface()
+    print(f"docs-check: {n_snip} snippet(s) executed, {n_links} links "
+          f"checked, {n_syms} API symbols verified")
+    if failures:
+        print("\n".join(f"FAIL: {f}" for f in failures), file=sys.stderr)
+        sys.exit(1)
+    print("docs-check: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,14 +3,20 @@
 Builds the SBOL-like two-silo recommendation dataset, then runs a
 :class:`~repro.core.party.VFLJob` — fit, federated evaluate (members
 answer feature-slice queries; nobody's raw data moves), shutdown — in
-local (thread) mode, and re-runs the identical protocol over TCP
-sockets: the seamless mode switch that is Stalactite's headline
-feature.
+local (thread) mode, then re-runs the identical protocol over TCP
+sockets and over the gRPC-framed transport (``mode="grpc"``,
+DESIGN.md §8): the seamless mode switch that is Stalactite's headline
+feature, now across the full matrix in README.md.
 
-The socket run is repeated with ``pipeline_depth=2`` (DESIGN.md §7):
-the master announces rounds one step ahead, members run their bottom
-forward with gradients at most one step stale, and compute overlaps
-the in-flight exchange — same protocol code, one knob.
+The socket and grpc runs are repeated with ``pipeline_depth=2``
+(DESIGN.md §7): the master announces rounds one step ahead, members
+run their bottom forward with gradients at most one step stale, and
+compute overlaps the in-flight exchange — same protocol code, one
+knob. Other knobs this demo inherits by default: ``he_packed=True``
+(SIMD Paillier for the arbitered protocol, DESIGN.md §3) and
+``CommCfg.encode_offload=True`` (isend serialization off the critical
+path). Add ``comm_cfg=CommCfg(link=LinkSpec(latency_ms=20))`` to any
+job to emulate a WAN deployment (docs/transports.md).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -33,7 +39,8 @@ def main():
     cfg = VFLConfig(protocol="split_nn", epochs=3, batch_size=64,
                     lr=0.05, seed=0, use_psi=True, embedding_dim=16)
 
-    for mode, depth in (("thread", 1), ("socket", 1), ("socket", 2)):
+    for mode, depth in (("thread", 1), ("socket", 1), ("socket", 2),
+                        ("grpc", 2)):
         with VFLJob(cfg, master, members, mode=mode,
                     pipeline_depth=depth) as job:
             fit = job.fit()

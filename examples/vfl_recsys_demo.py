@@ -9,10 +9,17 @@ feature-slice queries, the master assembles scores — so the post-
 training AUC comes from the protocol itself, not from an evaluator that
 secretly holds every silo.
 
-  PYTHONPATH=src python examples/vfl_recsys_demo.py [--full]
+  PYTHONPATH=src python examples/vfl_recsys_demo.py [--full] [--mode M]
 
 --full uses the published SBOL scale (190k users); default is a reduced
-scale so the demo finishes in seconds on CPU.
+scale so the demo finishes in seconds on CPU. --mode picks any
+execution mode from the README matrix (thread / process / socket /
+socket_proc / grpc / grpc_proc) — identical protocol code either way.
+Current config knobs exercised here: ``he_packed=True`` by default
+(packed SIMD Paillier, DESIGN.md §3 — the arbiter decrypts ~K× fewer
+ciphertexts), and ``pipeline_depth`` / ``comm_cfg`` pass straight
+through :class:`~repro.core.party.VFLJob` for bounded-staleness
+pipelining (DESIGN.md §7) and WAN link emulation (DESIGN.md §8).
 """
 import argparse
 import json
@@ -33,7 +40,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--mode", default="thread",
-                    choices=("thread", "process", "socket"))
+                    choices=("thread", "process", "socket",
+                             "socket_proc", "grpc", "grpc_proc"))
     args = ap.parse_args()
 
     dcfg = VFLRecsysConfig() if args.full else VFLRecsysConfig().reduced()

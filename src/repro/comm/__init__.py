@@ -1,5 +1,6 @@
 from repro.comm.base import (Message, PartyCommunicator,            # noqa: F401
-                             CommStats, RecvFuture, SendFuture)
+                             CommCfg, CommStats, LinkSpec,
+                             RecvFuture, SendFuture)
 from repro.comm.local import ThreadBus, ThreadCommunicator          # noqa: F401
 from repro.comm.schema import (Field, MsgType, SchemaError,         # noqa: F401
                                TypedChannel, message)

@@ -8,31 +8,110 @@ time) — the paper's "comprehensive logging of payload, exchange time".
 
 Non-blocking engine (DESIGN.md §7): every communicator owns one
 background sender thread draining a FIFO queue, so ``isend`` returns a
-:class:`SendFuture` immediately — encode happens on the caller thread
-(the payload is snapshotted, safe to mutate afterwards), the wire write
-happens off it. The blocking ``send`` is a thin wrapper (``isend`` +
-wait) with a fast path that writes inline when nothing is queued, so
-the synchronous protocols pay no thread handoff. ``irecv`` returns a
+:class:`SendFuture` immediately. Encode (safetensors serialization)
+runs on the *sender thread* by default (DESIGN.md §8.3): the caller
+only snapshots the payload — arrays whose buffers are writeable are
+copied on enqueue, read-only arrays (e.g. jax exports) ride as-is — so
+protocols may update weights in place the moment ``isend`` returns
+while the master's critical path no longer pays serialization.
+``CommCfg(encode_offload=False)`` restores caller-side encode. The
+blocking ``send`` is a thin wrapper (``isend`` + wait) with a fast path
+that encodes and writes inline when nothing is queued, so the
+synchronous protocols pay no thread handoff. ``irecv`` returns a
 :class:`RecvFuture` that resolves lazily: message *arrival* already
 progresses in the background on every transport (listener threads /
 mailbox queues), so resolving is just the matching wait.
 ``CommStats`` splits queued-time (waiting behind earlier sends) from
 wire-time (inside the transport write).
+
+WAN emulation (DESIGN.md §8.2): ``CommCfg.link = LinkSpec(...)``
+shapes every outbound message in the sender thread — bandwidth
+serializes messages on a virtual link clock, latency (plus optional
+jitter) delays delivery *in parallel* across in-flight messages, the
+way real propagation delay does — so loopback benchmarks and tests can
+reproduce the cross-silo regimes the VFL-in-practice literature warns
+about without leaving one host.
 """
 from __future__ import annotations
 
 import abc
 import queue as queue_mod
+import random
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.comm import codec
 
 Payload = Dict[str, np.ndarray]
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """Emulated WAN link applied to every outbound message.
+
+    ``latency_ms`` is one-way propagation delay (an RTT of 40 ms means
+    ``latency_ms=20`` on both parties' links); ``bandwidth_mbps`` is
+    the serialization rate in megabits/s (0 = unlimited);
+    ``jitter_ms`` adds uniform-random extra delay in ``[0, jitter_ms]``
+    per message (FIFO order is preserved — a jittered message never
+    overtakes an earlier one).
+
+    Latency is modeled as *propagation*: two messages enqueued
+    back-to-back both arrive ~``latency_ms`` later, not 2x. Bandwidth
+    is modeled as *serialization*: each message occupies the link for
+    ``nbytes * 8 / bandwidth`` seconds before the next may enter.
+
+    Example::
+
+        from repro.comm.base import CommCfg, LinkSpec
+
+        wan = CommCfg(link=LinkSpec(latency_ms=20, bandwidth_mbps=100))
+        job = VFLJob(cfg, master, members, mode="grpc", comm_cfg=wan)
+    """
+
+    latency_ms: float = 0.0
+    bandwidth_mbps: float = 0.0
+    jitter_ms: float = 0.0
+
+
+@dataclass(frozen=True)
+class CommCfg:
+    """Transport-independent communicator settings.
+
+    ``timeout``: default bound for every blocking wait (connect, recv,
+    blocking-send completion); per-call ``timeout=`` overrides it.
+    ``None`` (the default) keeps each transport's own default (120 s;
+    240 s for process mailboxes, sized for slow spawn imports) — so a
+    CommCfg passed only for, say, link shaping never silently tightens
+    a transport's deliberate timeout.
+    ``nodelay``: disable Nagle on TCP transports (keep True; the flag
+    exists so benchmarks can measure the before/after honestly).
+    ``link``: optional :class:`LinkSpec` WAN emulation, applied in the
+    sender thread of every transport.
+    ``encode_offload``: serialize ``isend`` payloads on the sender
+    thread instead of the caller (True, the default, shaves the
+    caller's critical path; the payload is snapshotted on enqueue
+    either way).
+
+    Example::
+
+        from repro.comm.base import CommCfg, LinkSpec
+
+        cfg = CommCfg(timeout=60.0,
+                      link=LinkSpec(latency_ms=40, jitter_ms=5))
+        job = VFLJob(vfl_cfg, master, members, mode="socket",
+                     comm_cfg=cfg)
+    """
+
+    timeout: Optional[float] = None
+    nodelay: bool = True
+    link: Optional[LinkSpec] = None
+    encode_offload: bool = True
 
 
 @dataclass
@@ -67,13 +146,18 @@ class CommStats:
     phase: str = "init"
     per_phase_bytes: Dict[str, int] = field(default_factory=dict)
 
-    def record_send(self, tag: str, nbytes: int, dt: float):
+    def record_send(self, tag: str, nbytes: int, dt: float,
+                    phase: Optional[str] = None):
+        # ``phase`` pins deferred-encode sends to the lifecycle phase
+        # they were *enqueued* in (the sender thread may only get to
+        # them after a phase transition)
+        phase = self.phase if phase is None else phase
         self.sent_messages += 1
         self.sent_bytes += nbytes
         self.send_s += dt
         self.per_tag_bytes[tag] = self.per_tag_bytes.get(tag, 0) + nbytes
-        self.per_phase_bytes[self.phase] = \
-            self.per_phase_bytes.get(self.phase, 0) + nbytes
+        self.per_phase_bytes[phase] = \
+            self.per_phase_bytes.get(phase, 0) + nbytes
 
     def record_wire(self, queued: float, wire: float, was_async: bool):
         # called under the communicator's send lock (sender thread or
@@ -152,14 +236,40 @@ class RecvFuture:
         return self._msg
 
 
-class _SendItem:
-    __slots__ = ("msg", "raw", "future", "t_enq")
+def _buffer_mutable(a: np.ndarray) -> bool:
+    """Could this array's bytes still change under the caller's feet?
+    A read-only *view* of a writeable array is mutable through its
+    base, so the snapshot must walk the whole ndarray ancestry; a
+    chain ending in None or a foreign buffer (jax exports) is only as
+    mutable as its read-only flags say."""
+    while isinstance(a, np.ndarray):
+        if a.flags.writeable:
+            return True
+        a = a.base
+    return False
 
-    def __init__(self, msg: Message, raw: bytes, future: SendFuture):
+
+class _SendItem:
+    """One queued outbound message. ``raw`` is the encoded blob, or
+    None when encode is offloaded to the sender thread (the message's
+    payload is already a snapshot, so late encode sees frozen bytes)."""
+
+    __slots__ = ("msg", "raw", "future", "t_enq", "phase")
+
+    def __init__(self, msg: Message, raw: Optional[bytes],
+                 future: SendFuture, phase: str):
         self.msg = msg
         self.raw = raw
         self.future = future
         self.t_enq = time.perf_counter()
+        self.phase = phase
+
+    def encode(self) -> bytes:
+        if self.raw is None:
+            m = self.msg
+            self.raw = codec.encode(
+                m.payload, {"sender": m.sender, "tag": m.tag, **m.meta})
+        return self.raw
 
 
 class PartyCommunicator(abc.ABC):
@@ -169,11 +279,28 @@ class PartyCommunicator(abc.ABC):
     """
 
     def __init__(self, me: str, world: Sequence[str],
-                 timeout: float = 120.0):
+                 timeout: float = 120.0,
+                 comm_cfg: Optional[CommCfg] = None):
         self.me = me
         self.world = list(world)
         self.stats = CommStats()
-        self._timeout = timeout
+        self.cfg = comm_cfg if comm_cfg is not None \
+            else CommCfg(timeout=timeout)
+        # CommCfg.timeout=None defers to the transport's constructor
+        # default (process mode deliberately runs 240 s, not 120 s)
+        self._timeout = self.cfg.timeout \
+            if self.cfg.timeout is not None else timeout
+        self._link = self.cfg.link
+        if self._link is not None and self._link == LinkSpec():
+            self._link = None            # all-zero spec: no shaping
+        # link-shaping clock (sender thread only): time the last byte
+        # of the previous message entered the emulated link, and the
+        # latest delivery stamp handed out (enforces FIFO under jitter)
+        self._link_busy = 0.0
+        self._link_last = 0.0
+        # stable per-agent seed (hash() is salted per interpreter — a
+        # spawned agent process would jitter differently every run)
+        self._link_rng = random.Random(zlib.crc32(me.encode()))
         # async sender engine: FIFO queue + lazily started drain thread.
         # _submitted/_completed (guarded by _send_lock) let the blocking
         # fast path prove nothing is queued OR in flight before writing
@@ -207,23 +334,64 @@ class PartyCommunicator(abc.ABC):
         return self._recv_any(frm, (tag,), timeout)
 
     # -- sender engine -------------------------------------------------------
+    def _shape_delay(self, t_enq: float, nbytes: int) -> None:
+        """Sleep (sender thread, no locks held) until the emulated link
+        would deliver this message. Bandwidth serializes on a virtual
+        clock keyed to *enqueue* time, so latency overlaps across
+        in-flight messages like real propagation delay; the delivery
+        stamp is monotonic so jitter never reorders the FIFO."""
+        link = self._link
+        tx = nbytes * 8.0 / (link.bandwidth_mbps * 1e6) \
+            if link.bandwidth_mbps else 0.0
+        self._link_busy = max(self._link_busy, t_enq) + tx
+        extra = self._link_rng.uniform(0.0, link.jitter_ms) * 1e-3 \
+            if link.jitter_ms else 0.0
+        deliver = self._link_busy + link.latency_ms * 1e-3 + extra
+        self._link_last = max(self._link_last, deliver)
+        dt = self._link_last - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+
+    def _finish_item(self, item: _SendItem,
+                     exc: Optional[BaseException]) -> None:
+        # caller must hold _send_lock
+        item.future._resolve(exc)
+        self._completed += 1
+        self._send_done.notify_all()
+
     def _sender_loop(self) -> None:
         while True:
             item = self._sendq.get()
             if item is None:
                 return
+            # fail fast (and skip encode) once the wire errored: after a
+            # partial write the stream may be mid-frame, so the engine
+            # never writes again
             with self._send_lock:
-                # after a write error the wire may be mid-frame: never
-                # write again — fail queued sends fast instead of
-                # corrupting the length-prefixed stream
                 if self._send_exc is not None:
-                    item.future._resolve(self._send_exc)
-                    self._completed += 1
-                    self._send_done.notify_all()
+                    self._finish_item(item, self._send_exc)
                     continue
+            try:
+                deferred = item.raw is None
+                raw = item.encode()
+            except BaseException as e:          # noqa: BLE001
+                # encode never touched the wire: the error is NOT
+                # sticky — only this send fails
+                with self._send_lock:
+                    self._finish_item(item, e)
+                continue
+            if self._link is not None:
+                self._shape_delay(item.t_enq, len(raw))
+            with self._send_lock:
+                if self._send_exc is not None:
+                    self._finish_item(item, self._send_exc)
+                    continue
+                if deferred:       # caller didn't know the byte count
+                    self.stats.record_send(item.msg.tag, len(raw), 0.0,
+                                           phase=item.phase)
                 t0 = time.perf_counter()
                 try:
-                    self._send(item.msg, item.raw)
+                    self._send(item.msg, raw)
                 except BaseException as e:          # noqa: BLE001
                     self._send_exc = e
                     item.future._resolve(e)
@@ -253,50 +421,85 @@ class PartyCommunicator(abc.ABC):
 
     # -- public API ----------------------------------------------------------
     def _make(self, to: str, tag: str, payload: Payload,
-              meta: Optional[Dict[str, str]]) -> "tuple[Message, bytes]":
-        payload = {k: np.asarray(v) for k, v in payload.items()}
+              meta: Optional[Dict[str, str]],
+              encode: bool = True) -> "Tuple[Message, Optional[bytes]]":
+        """Build the Message (+ encoded blob unless deferred). With
+        ``encode=False`` the payload is *snapshotted* instead: arrays
+        whose buffers are writeable are copied (the caller may mutate
+        them the moment isend returns — the snapshot contract),
+        read-only arrays ride as-is (jax exports, received tensors)."""
+        if encode:
+            payload = {k: np.asarray(v) for k, v in payload.items()}
+        else:
+            snap = {}
+            for k, v in payload.items():
+                a = np.asarray(v)
+                if _buffer_mutable(a):
+                    a = a.copy()
+                snap[k] = a
+            payload = snap
         msg = Message(self.me, to, tag, payload, dict(meta or {}))
+        if not encode:
+            return msg, None
         raw = codec.encode(payload, {"sender": self.me, "tag": tag,
                                      **msg.meta})
         return msg, raw
 
-    def isend(self, to: str, tag: str, payload: Payload,
-              meta: Optional[Dict[str, str]] = None) -> SendFuture:
-        """Non-blocking send: encode now (payload snapshot), write on
-        the background sender thread, FIFO with every other send."""
-        self._raise_pending_send_error()
-        t0 = time.perf_counter()
-        msg, raw = self._make(to, tag, payload, meta)
+    def _enqueue(self, msg: Message, raw: Optional[bytes],
+                 t0: float) -> SendFuture:
         fut = SendFuture(msg)
         self._ensure_sender()
         with self._send_lock:
             self._submitted += 1
-        self._sendq.put(_SendItem(msg, raw, fut))
-        self.stats.record_send(tag, len(raw), time.perf_counter() - t0)
+            if raw is not None:
+                self.stats.record_send(msg.tag, len(raw),
+                                       time.perf_counter() - t0)
+        self._sendq.put(_SendItem(msg, raw, fut, self.stats.phase))
         return fut
+
+    def isend(self, to: str, tag: str, payload: Payload,
+              meta: Optional[Dict[str, str]] = None) -> SendFuture:
+        """Non-blocking send: snapshot the payload now, encode + write
+        on the background sender thread (or encode inline when
+        ``CommCfg.encode_offload`` is off), FIFO with every other send.
+
+        Example::
+
+            fut = comm.isend("master", "splitnn/u", {"u": acts})
+            ...                      # overlap compute with the write
+            fut.result(timeout=30)   # re-raises transport errors
+        """
+        self._raise_pending_send_error()
+        t0 = time.perf_counter()
+        msg, raw = self._make(to, tag, payload, meta,
+                              encode=not self.cfg.encode_offload)
+        return self._enqueue(msg, raw, t0)
 
     def send(self, to: str, tag: str, payload: Payload,
              meta: Optional[Dict[str, str]] = None) -> None:
         """Blocking send. Fast path: when no async send is queued or in
-        flight, write inline on the caller thread (no handoff)."""
+        flight (and no link shaping is active), encode and write inline
+        on the caller thread — no thread handoff."""
         self._raise_pending_send_error()
         t0 = time.perf_counter()
-        msg, raw = self._make(to, tag, payload, meta)
-        with self._send_lock:
-            if self._submitted == self._completed:
-                t1 = time.perf_counter()
-                self._send(msg, raw)
-                self.stats.record_wire(0.0, time.perf_counter() - t1,
-                                       was_async=False)
-                self.stats.record_send(tag, len(raw),
-                                       time.perf_counter() - t0)
-                return
-        # async sends outstanding: join the FIFO behind them
-        fut = SendFuture(msg)
-        with self._send_lock:
-            self._submitted += 1
-        self._sendq.put(_SendItem(msg, raw, fut))
-        self.stats.record_send(tag, len(raw), time.perf_counter() - t0)
+        if self._link is None:
+            msg, raw = self._make(to, tag, payload, meta)
+            with self._send_lock:
+                if self._submitted == self._completed:
+                    t1 = time.perf_counter()
+                    self._send(msg, raw)
+                    self.stats.record_wire(0.0, time.perf_counter() - t1,
+                                           was_async=False)
+                    self.stats.record_send(tag, len(raw),
+                                           time.perf_counter() - t0)
+                    return
+        else:
+            # shaped links route every send through the sender thread:
+            # the link clock lives there, and the delivery sleep must
+            # not run under the send lock
+            msg, raw = self._make(to, tag, payload, meta)
+        # async sends outstanding (or link shaping): join the FIFO
+        fut = self._enqueue(msg, raw, t0)
         fut.result(self._timeout)
 
     def flush_sends(self, timeout: Optional[float] = None) -> None:

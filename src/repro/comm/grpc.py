@@ -1,0 +1,255 @@
+"""gRPC-style framed transport: HTTP/2-like wire format, stdlib only.
+
+The paper ships gRPC + Protobuf + Safetensors. This transport
+reproduces the gRPC *wire shape* — an HTTP/2 connection preface, a
+SETTINGS frame, HPACK-encoded HEADERS opening one stream per message,
+and the payload chunked into DATA frames behind the 5-byte gRPC
+message prefix — over plain TCP with no third-party dependency, while
+speaking the exact same safetensors channel payloads as the socket
+transport (``comm/sock.py``): the two are interchangeable under every
+protocol, and the seed-trace bit-identity suite runs on both. When the
+real ``grpcio`` package is available it can be slotted behind the same
+interface, but nothing here imports it.
+
+Scope (documented in docs/transports.md, internals in DESIGN.md §8):
+
+* Each direction of each agent pair is its own client connection
+  (mirroring the socket transport's lazy outbound links); the server
+  side is write-silent — no SETTINGS ack, WINDOW_UPDATE or trailers.
+  Flow control is TCP's.
+* HEADERS use HPACK *literal without indexing* representations only
+  (no dynamic table, no Huffman) — valid HPACK, trivially decodable.
+* Stream 1 is the connection hello (``:path /repro.Party/Hello`` +
+  ``grpc-agent``), so a peer dying inside its very first data stream
+  is still attributable and fails waiters fast.
+* Messages ride one stream each (odd ids, ascending): HEADERS
+  (END_HEADERS) then DATA frames of at most 16384 bytes, the last
+  flagged END_STREAM. The DATA body is the gRPC length-prefixed
+  message: 1 compressed-flag byte (always 0 — compression happens at
+  the schema layer), a 4-byte big-endian length, then the safetensors
+  blob whose ``__metadata__`` carries sender/tag exactly as on the
+  socket transport.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+from typing import Dict, List, Optional, Tuple
+
+from repro.comm import codec
+from repro.comm.base import Message
+from repro.comm.sock import (_MidFrameClose, _TcpCommunicator,
+                             _recv_exact, local_addresses)
+
+__all__ = ["GrpcCommunicator", "local_addresses"]
+
+PREFACE = b"PRI * HTTP/2.0\r\n\r\nSM\r\n\r\n"
+MAX_FRAME = 16384                      # HTTP/2 default SETTINGS_MAX_FRAME_SIZE
+
+# frame types
+FT_DATA = 0x0
+FT_HEADERS = 0x1
+FT_SETTINGS = 0x4
+
+# frame flags
+FLAG_END_STREAM = 0x1
+FLAG_END_HEADERS = 0x4
+
+_HELLO_PATH = "/repro.Party/Hello"
+_SEND_PATH = "/repro.Party/Exchange"
+
+
+def _hp_int(n: int, prefix_bits: int, first: int = 0) -> bytes:
+    """HPACK integer encoding (RFC 7541 §5.1) with ``first`` carrying
+    the representation's pattern bits above the prefix."""
+    limit = (1 << prefix_bits) - 1
+    if n < limit:
+        return bytes([first | n])
+    out = [first | limit]
+    n -= limit
+    while n >= 128:
+        out.append((n & 0x7F) | 0x80)
+        n >>= 7
+    out.append(n)
+    return bytes(out)
+
+
+def _hp_read_int(buf: bytes, pos: int, prefix_bits: int
+                 ) -> Tuple[int, int]:
+    limit = (1 << prefix_bits) - 1
+    n = buf[pos] & limit
+    pos += 1
+    if n < limit:
+        return n, pos
+    shift = 0
+    while True:
+        b = buf[pos]
+        pos += 1
+        n += (b & 0x7F) << shift
+        shift += 7
+        if not b & 0x80:
+            return n, pos
+
+
+def hpack_encode(headers: List[Tuple[str, str]]) -> bytes:
+    """Literal-without-indexing representations only (pattern 0000)."""
+    out = bytearray()
+    for k, v in headers:
+        kb, vb = k.encode(), v.encode()
+        out += b"\x00"                       # literal, name not indexed
+        out += _hp_int(len(kb), 7) + kb      # H bit 0: raw octets
+        out += _hp_int(len(vb), 7) + vb
+    return bytes(out)
+
+
+def hpack_decode(block: bytes) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    pos = 0
+    try:
+        while pos < len(block):
+            if block[pos] != 0x00:
+                raise ValueError(
+                    f"unsupported HPACK representation "
+                    f"0x{block[pos]:02x} (this transport emits "
+                    f"literal-without-indexing only)")
+            pos += 1
+            klen, pos = _hp_read_int(block, pos, 7)
+            k = block[pos:pos + klen].decode()
+            pos += klen
+            vlen, pos = _hp_read_int(block, pos, 7)
+            out[k] = block[pos:pos + vlen].decode()
+            pos += vlen
+    except (IndexError, UnicodeDecodeError) as e:
+        # normalize so _serve_conn's except clause attributes the drop
+        # instead of the listener thread dying unhandled
+        raise ValueError(f"truncated/garbled HPACK block: {e}") from e
+    return out
+
+
+def _frame(ftype: int, flags: int, stream: int, body: bytes) -> bytes:
+    return (len(body).to_bytes(3, "big") + bytes((ftype, flags))
+            + (stream & 0x7FFFFFFF).to_bytes(4, "big") + body)
+
+
+def _read_frame(conn: socket.socket) -> Tuple[int, int, int, bytes]:
+    hdr = _recv_exact(conn, 9)
+    length = int.from_bytes(hdr[:3], "big")
+    ftype, flags = hdr[3], hdr[4]
+    stream = int.from_bytes(hdr[5:9], "big") & 0x7FFFFFFF
+    body = _recv_exact(conn, length) if length else b""
+    return ftype, flags, stream, body
+
+
+class GrpcCommunicator(_TcpCommunicator):
+    """gRPC-framed transport; a drop-in peer of ``SocketCommunicator``.
+
+    Registers as ``mode="grpc"`` (agents as threads) and
+    ``mode="grpc_proc"`` (one OS process per agent) in
+    :class:`~repro.core.party.VFLJob`.
+
+    Example::
+
+        from repro.comm.grpc import GrpcCommunicator, local_addresses
+
+        addrs = local_addresses(["master", "member0"])
+        cm = GrpcCommunicator("master", addrs)
+        c0 = GrpcCommunicator("member0", addrs)
+        c0.send("master", "t", {"x": np.arange(4.0)})
+        assert cm.recv("member0", "t").tensor("x")[1] == 1.0
+    """
+
+    def __init__(self, me, addresses, timeout: float = 120.0,
+                 nodelay: bool = True, comm_cfg=None):
+        super().__init__(me, addresses, timeout=timeout,
+                         nodelay=nodelay, comm_cfg=comm_cfg)
+        self._next_stream = 3              # stream 1 is the hello
+
+    # -- client side ---------------------------------------------------------
+    def _greet(self, conn: socket.socket) -> None:
+        hello = hpack_encode([
+            (":method", "POST"), (":scheme", "http"),
+            (":path", _HELLO_PATH), (":authority", "party"),
+            ("grpc-agent", self.me),
+        ])
+        conn.sendall(PREFACE + _frame(FT_SETTINGS, 0, 0, b"")
+                     + _frame(FT_HEADERS,
+                              FLAG_END_HEADERS | FLAG_END_STREAM, 1,
+                              hello))
+
+    def _send(self, msg: Message, raw: bytes) -> None:
+        stream = self._next_stream         # sender-thread serialized
+        self._next_stream += 2
+        headers = hpack_encode([
+            (":method", "POST"), (":scheme", "http"),
+            (":path", _SEND_PATH), (":authority", msg.recipient),
+            ("content-type", "application/grpc+safetensors"),
+            ("grpc-agent", self.me),
+        ])
+        grpc_msg = b"\x00" + struct.pack(">I", len(raw)) + raw
+        bufs = [_frame(FT_HEADERS, FLAG_END_HEADERS, stream, headers)]
+        for lo in range(0, len(grpc_msg), MAX_FRAME):
+            chunk = grpc_msg[lo:lo + MAX_FRAME]
+            last = lo + MAX_FRAME >= len(grpc_msg)
+            bufs.append(_frame(FT_DATA, FLAG_END_STREAM if last else 0,
+                               stream, chunk))
+        # small messages coalesce into one sendall (one packet under
+        # NODELAY), mirroring the socket transport's inline-frame path
+        if len(grpc_msg) <= MAX_FRAME:
+            self._write_frames(msg.recipient, b"".join(bufs))
+        else:
+            self._write_frames(msg.recipient, *bufs)
+
+    # -- server side ---------------------------------------------------------
+    def _serve_conn(self, conn: socket.socket) -> None:
+        sender: Optional[str] = None
+        streams: Dict[int, bytearray] = {}
+        try:
+            if _recv_exact(conn, len(PREFACE)) != PREFACE:
+                raise ConnectionError("bad HTTP/2 connection preface")
+            while True:
+                ftype, flags, stream, body = _read_frame(conn)
+                if ftype == FT_SETTINGS:
+                    continue               # write-silent server: no ack
+                if ftype == FT_HEADERS:
+                    hdrs = hpack_decode(body)
+                    agent = hdrs.get("grpc-agent")
+                    if agent:
+                        sender = agent
+                    if hdrs.get(":path") == _HELLO_PATH:
+                        continue
+                    streams[stream] = bytearray()
+                elif ftype == FT_DATA:
+                    buf = streams.get(stream)
+                    if buf is None:
+                        raise ConnectionError(
+                            f"DATA on unopened stream {stream}")
+                    buf += body
+                    if flags & FLAG_END_STREAM:
+                        # deliver BEFORE closing the stream ledger: a
+                        # corrupt gRPC prefix raises with the stream
+                        # still open, so the drop is attributed below
+                        # instead of hanging waiters to the timeout
+                        self._deliver_stream(sender, bytes(buf))
+                        del streams[stream]
+                # unknown frame types are ignored (HTTP/2 §4.1 says
+                # implementations must discard frames they don't know)
+        except (ConnectionError, OSError, ValueError) as e:
+            # a clean close lands between frames with no stream open;
+            # anything else (mid-frame partial read, an open stream,
+            # bad preface/HPACK) means the peer died with a message on
+            # the wire — attribute it and fail waiters fast
+            if streams or isinstance(e, (_MidFrameClose, ValueError)):
+                self._mark_down(sender)
+            return
+
+    def _deliver_stream(self, sender: Optional[str], buf: bytes) -> None:
+        if len(buf) < 5:
+            raise ConnectionError("short gRPC message prefix")
+        (n,) = struct.unpack(">I", buf[1:5])
+        if len(buf) - 5 != n:
+            raise ConnectionError(
+                f"gRPC length prefix {n} != body {len(buf) - 5}")
+        payload, meta = codec.decode(buf[5:])
+        sender = meta.pop("sender", sender)
+        tag = meta.pop("tag")
+        self._deliver(Message(sender, self.me, tag, payload, meta))

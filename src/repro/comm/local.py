@@ -27,9 +27,10 @@ class ThreadBus:
         self._boxes: Dict[str, "queue.Queue[bytes]"] = {
             w: queue.Queue() for w in world}
 
-    def communicator(self, me: str,
-                     timeout: float = 120.0) -> "ThreadCommunicator":
-        return ThreadCommunicator(me, self, timeout=timeout)
+    def communicator(self, me: str, timeout: float = 120.0,
+                     comm_cfg=None) -> "ThreadCommunicator":
+        return ThreadCommunicator(me, self, timeout=timeout,
+                                  comm_cfg=comm_cfg)
 
 
 class _MailboxCommunicator(PartyCommunicator):
@@ -87,8 +88,10 @@ class _MailboxCommunicator(PartyCommunicator):
 
 
 class ThreadCommunicator(_MailboxCommunicator):
-    def __init__(self, me: str, bus: ThreadBus, timeout: float = 120.0):
-        super().__init__(me, bus.world, timeout=timeout)
+    def __init__(self, me: str, bus: ThreadBus, timeout: float = 120.0,
+                 comm_cfg=None):
+        super().__init__(me, bus.world, timeout=timeout,
+                         comm_cfg=comm_cfg)
         self._bus = bus
         self._pending: Dict[Tuple[str, str], list] = {}
 

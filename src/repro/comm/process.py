@@ -25,14 +25,17 @@ class ProcessBus:
         ctx = ctx or mp.get_context("spawn")
         self.boxes: Dict[str, mp.Queue] = {w: ctx.Queue() for w in world}
 
-    def communicator(self, me: str,
-                     timeout: float = 240.0) -> "ProcessCommunicator":
-        return ProcessCommunicator(me, self, timeout=timeout)
+    def communicator(self, me: str, timeout: float = 240.0,
+                     comm_cfg=None) -> "ProcessCommunicator":
+        return ProcessCommunicator(me, self, timeout=timeout,
+                                   comm_cfg=comm_cfg)
 
 
 class ProcessCommunicator(_MailboxCommunicator):
-    def __init__(self, me: str, bus: ProcessBus, timeout: float = 240.0):
-        super().__init__(me, bus.world, timeout=timeout)
+    def __init__(self, me: str, bus: ProcessBus, timeout: float = 240.0,
+                 comm_cfg=None):
+        super().__init__(me, bus.world, timeout=timeout,
+                         comm_cfg=comm_cfg)
         self._boxes = bus.boxes
         self._pending: Dict[Tuple[str, str], list] = {}
 

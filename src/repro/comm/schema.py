@@ -85,7 +85,21 @@ _FRAME_TYPE = "frame"          # wire tag prefix for coalesced frames
 def message(name: str, fields: Optional[Mapping[str, Field]] = None,
             stepped: bool = False, compress: bool = False,
             doc: str = "") -> MsgType:
-    """Declare (or idempotently re-declare) a message type."""
+    """Declare (or idempotently re-declare) a message type.
+
+    ``fields`` maps payload tensor names to :class:`Field` constraints
+    (None = free-form payload); ``stepped`` auto-threads a sequence
+    number per (peer, type) channel; ``compress`` opts the type's float
+    payloads into int8 error-feedback compression on compressing
+    channels (HE ciphertext types simply never declare it).
+
+    Example::
+
+        schema.message("linreg/z", {"z": Field("float64", 2)},
+                       stepped=True,
+                       doc="member partial predictions, one per step")
+        ch.send("master", "linreg/z", {"z": zb})   # no step threading
+    """
     mt = MsgType(name, dict(fields) if fields is not None else None,
                  stepped, compress, doc)
     prev = MESSAGES.get(name)
@@ -153,6 +167,14 @@ class TypedChannel:
     send/recv, so both ends stay in lock-step without protocol code
     ever formatting a tag. Out-of-order arrivals (frames racing bare
     messages) are reordered per channel before delivery.
+
+    Example::
+
+        ch = TypedChannel(comm, compress=cfg.compress)
+        with ch.frame("member0"):          # one wire message
+            ch.send("member0", "ctrl/step", step_payload)
+            ch.send("member0", "predict/rows", {"rows": rows})
+        msg = ch.recv("member0", "splitnn/pred_u")
     """
 
     def __init__(self, comm: PartyCommunicator, compress: bool = False):

@@ -1,10 +1,11 @@
-"""Distributed TCP communicator — the offline stand-in for the paper's
-gRPC transport (gRPC adds framing/auth on top of the same safetensors
-payloads; semantics are identical for protocol purposes).
+"""Distributed TCP communicator: length-prefixed safetensors frames.
 
 Every agent runs a listener thread; messages are length-prefixed
 safetensors blobs. Agents connect lazily and reuse sockets. Works across
-hosts; in tests everything binds to 127.0.0.1.
+hosts; in tests everything binds to 127.0.0.1. The gRPC-style framed
+transport (``comm/grpc.py``) shares this module's server/connection
+machinery (:class:`_TcpCommunicator`) and differs only in the wire
+framing — see docs/transports.md for both wire formats.
 
 Latency engineering (DESIGN.md §7): ``TCP_NODELAY`` is set on both the
 connecting and the accepted side (small control messages used to sit in
@@ -24,7 +25,7 @@ import time
 from typing import Dict, Optional, Sequence, Set, Tuple
 
 from repro.comm import codec
-from repro.comm.base import Message, PartyCommunicator
+from repro.comm.base import CommCfg, Message, PartyCommunicator
 
 # below this, prefix+body are concatenated into one buffer (one packet
 # under NODELAY); above it, the concat copy costs more than it saves
@@ -50,26 +51,44 @@ def _recv_exact(conn: socket.socket, n: int) -> bytes:
     return b"".join(chunks)
 
 
-class SocketCommunicator(PartyCommunicator):
+class _TcpCommunicator(PartyCommunicator):
+    """Shared TCP server/connection machinery for framed transports.
+
+    Owns the listener socket (bind retries transient EADDRINUSE — a
+    pre-allocated port can be sniped before a spawned child binds it),
+    the accept loop, lazy outbound connections with connect retries
+    (independently booting agents link up in any order), the pending
+    message store with mid-frame-drop attribution, and close().
+
+    Subclasses provide the wire format:
+
+    * ``_greet(conn)`` — write the connection opening (hello frame /
+      HTTP/2 preface) right after connect.
+    * ``_serve_conn(conn)`` — per-connection read loop; deliver parsed
+      messages via ``_deliver`` and attribute drops via ``_mark_down``.
+    * ``_send(msg, raw)`` — frame and write one message.
+    """
+
     def __init__(self, me: str, addresses: Dict[str, Tuple[str, int]],
-                 timeout: float = 120.0, nodelay: bool = True):
-        """addresses: agent id -> (host, port) for EVERY agent.
+                 timeout: float = 120.0, nodelay: bool = True,
+                 comm_cfg: Optional[CommCfg] = None):
+        """``addresses``: agent id -> (host, port) for EVERY agent.
 
         ``timeout`` bounds every blocking wait (connect + recv);
         ``nodelay`` disables Nagle (keep True — the flag exists so the
-        benchmark can measure the before/after honestly).
+        benchmark can measure the before/after honestly). Both are
+        superseded by ``comm_cfg`` when one is passed.
         """
-        super().__init__(me, list(addresses), timeout=timeout)
+        super().__init__(me, list(addresses), timeout=timeout,
+                         comm_cfg=comm_cfg)
         self._addr = dict(addresses)
         self._pending: Dict[Tuple[str, str], list] = {}
         self._cv = threading.Condition()
         self._out: Dict[str, socket.socket] = {}
         self._down: Set[str] = set()
-        self._nodelay = nodelay
+        self._nodelay = self.cfg.nodelay if comm_cfg is not None \
+            else nodelay
         host, port = self._addr[me]
-        # pre-allocated ports can be sniped between allocation and bind
-        # (socket_proc: the bind happens seconds later in a spawned
-        # child) — retry transient EADDRINUSE briefly before giving up
         deadline = time.monotonic() + min(self._timeout, 10.0)
         while True:
             try:
@@ -96,43 +115,28 @@ class SocketCommunicator(PartyCommunicator):
             threading.Thread(target=self._serve_conn, args=(conn,),
                              daemon=True).start()
 
-    def _serve_conn(self, conn: socket.socket):
-        sender: Optional[str] = None
-        mid_frame = False
-        try:
-            # connection hello: the first frame is the peer's agent id,
-            # so even a drop during the peer's FIRST data frame is
-            # attributable and fails waiters instead of hanging
-            (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
-            sender = _recv_exact(conn, n).decode()
-            while True:
-                mid_frame = False
-                (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
-                mid_frame = True
-                raw = _recv_exact(conn, n)
-                payload, meta = codec.decode(raw)
-                sender = meta.pop("sender", sender)
-                tag = meta.pop("tag")
-                msg = Message(sender, self.me, tag, payload, meta)
-                with self._cv:
-                    self._pending.setdefault((sender, tag),
-                                             []).append(msg)
-                    self._cv.notify_all()
-        except (ConnectionError, OSError) as e:
-            # a clean close lands exactly between frames; a drop with
-            # bytes outstanding (inside the body — mid_frame — or even
-            # inside the next length prefix, _MidFrameClose) means the
-            # peer died with a message on the wire. The sender delivers
-            # nothing further: mark it down and wake waiters so they
-            # error instead of hanging out the timeout.
-            if sender is not None and self._alive \
-                    and (mid_frame or isinstance(e, _MidFrameClose)):
-                with self._cv:
-                    self._down.add(sender)
-                    self._cv.notify_all()
-            return
+    def _serve_conn(self, conn: socket.socket) -> None:
+        raise NotImplementedError
+
+    def _deliver(self, msg: Message) -> None:
+        with self._cv:
+            self._pending.setdefault((msg.sender, msg.tag),
+                                     []).append(msg)
+            self._cv.notify_all()
+
+    def _mark_down(self, sender: Optional[str]) -> None:
+        """A connection from ``sender`` died with bytes outstanding:
+        nothing further will be delivered — wake waiters so they error
+        instead of hanging out the timeout."""
+        if sender is not None and self._alive:
+            with self._cv:
+                self._down.add(sender)
+                self._cv.notify_all()
 
     # -- client side ---------------------------------------------------------
+    def _greet(self, conn: socket.socket) -> None:
+        raise NotImplementedError
+
     def _conn_to(self, to: str) -> socket.socket:
         if to not in self._out:
             # peers boot independently (one process per agent): retry
@@ -150,30 +154,26 @@ class SocketCommunicator(PartyCommunicator):
                     time.sleep(0.05)
             if self._nodelay:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            me = self.me.encode()
-            conn.sendall(struct.pack("<Q", len(me)) + me)   # hello
+            self._greet(conn)
             self._out[to] = conn
         return self._out[to]
 
-    def _send(self, msg: Message, raw: bytes) -> None:
-        conn = self._conn_to(msg.recipient)
-        prefix = struct.pack("<Q", len(raw))
+    def _write_frames(self, recipient: str, *bufs: bytes) -> None:
+        """Write buffers to ``recipient``; on any error drop the
+        connection so no later write can corrupt the peer's framing."""
+        conn = self._conn_to(recipient)
         try:
-            if len(raw) <= _INLINE_FRAME_BYTES:
-                conn.sendall(prefix + raw)  # one buffer -> one packet
-            else:
-                conn.sendall(prefix)
-                conn.sendall(raw)
+            for b in bufs:
+                conn.sendall(b)
         except BaseException:
-            # the stream may be mid-frame: drop the connection so no
-            # later write can corrupt the peer's length-prefix parse
-            self._out.pop(msg.recipient, None)
+            self._out.pop(recipient, None)
             try:
                 conn.close()
             except OSError:
                 pass
             raise
 
+    # -- receive side --------------------------------------------------------
     def _recv_any(self, frm: str, tags: Sequence[str],
                   timeout: Optional[float] = None) -> Message:
         timeout = self._timeout if timeout is None else timeout
@@ -217,6 +217,60 @@ class SocketCommunicator(PartyCommunicator):
                 c.close()
             except OSError:
                 pass
+
+
+class SocketCommunicator(_TcpCommunicator):
+    """Length-prefix framing: each message is an 8-byte little-endian
+    length followed by the safetensors blob; a connection opens with a
+    hello frame naming the connecting agent (so even a drop during the
+    peer's FIRST data frame is attributable).
+
+    Example::
+
+        addrs = local_addresses(["master", "member0"])
+        cm = SocketCommunicator("master", addrs)
+        # ... on the other host/thread/process:
+        c0 = SocketCommunicator("member0", addrs)
+        c0.send("master", "hello", {"x": np.zeros(3)})
+        msg = cm.recv("member0", "hello")
+    """
+
+    def _serve_conn(self, conn: socket.socket):
+        sender: Optional[str] = None
+        mid_frame = False
+        try:
+            # connection hello: the first frame is the peer's agent id
+            (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
+            sender = _recv_exact(conn, n).decode()
+            while True:
+                mid_frame = False
+                (n,) = struct.unpack("<Q", _recv_exact(conn, 8))
+                mid_frame = True
+                raw = _recv_exact(conn, n)
+                payload, meta = codec.decode(raw)
+                sender = meta.pop("sender", sender)
+                tag = meta.pop("tag")
+                self._deliver(Message(sender, self.me, tag, payload,
+                                      meta))
+        except (ConnectionError, OSError) as e:
+            # a clean close lands exactly between frames; a drop with
+            # bytes outstanding (inside the body — mid_frame — or even
+            # inside the next length prefix, _MidFrameClose) means the
+            # peer died with a message on the wire
+            if mid_frame or isinstance(e, _MidFrameClose):
+                self._mark_down(sender)
+            return
+
+    def _greet(self, conn: socket.socket) -> None:
+        me = self.me.encode()
+        conn.sendall(struct.pack("<Q", len(me)) + me)   # hello
+
+    def _send(self, msg: Message, raw: bytes) -> None:
+        prefix = struct.pack("<Q", len(raw))
+        if len(raw) <= _INLINE_FRAME_BYTES:
+            self._write_frames(msg.recipient, prefix + raw)
+        else:
+            self._write_frames(msg.recipient, prefix, raw)
 
 
 def local_addresses(world: Sequence[str], base_port: int = 0

@@ -17,11 +17,15 @@ name (or a ``"module:Class"`` spec for user protocols).
     results = job.shutdown()     # per-role result dicts
 
 ``run_vfl(...)`` is the one-shot compatibility wrapper (fit + shutdown)
-and runs in any of the three paper modes — "thread" (in-process
-queues), "process" (multiprocessing), "socket" (TCP + safetensors
-framing) — with identical protocol code; mode equivalence is a tested
-claim (EXPERIMENTS.md §Functional). A fourth beyond-paper mode, the TPU
-mesh step, lives in core/vfl_step.py.
+and runs in every execution mode — "thread" (in-process queues),
+"process" (multiprocessing), "socket"/"socket_proc" (TCP +
+length-prefix framing), "grpc"/"grpc_proc" (TCP + HTTP/2-like gRPC
+framing, DESIGN.md §8) — with identical protocol code; mode
+equivalence is a tested claim (seed-trace bit-identity across all six
+modes). A further beyond-paper mode, the TPU mesh step, lives in
+core/vfl_step.py. ``comm_cfg=CommCfg(...)`` configures transports
+(timeouts, encode offload, WAN link emulation); docs/transports.md is
+the user-facing guide.
 """
 from __future__ import annotations
 
@@ -32,7 +36,8 @@ import time
 import traceback
 from typing import Any, Dict, List, Optional, Sequence
 
-from repro.comm.base import PartyCommunicator
+from repro.comm.base import CommCfg, PartyCommunicator
+from repro.comm.grpc import GrpcCommunicator
 from repro.comm.local import ThreadBus
 from repro.comm.schema import TypedChannel
 from repro.comm.sock import SocketCommunicator, local_addresses
@@ -193,14 +198,15 @@ def _agent_entry(role: str, comm: PartyCommunicator, cfg: VFLConfig,
 
 def _mp_entry(role, transport, world, cfg, data, q, callbacks=None,
               resume_dir=None, cmd_q=None, res_q=None,
-              comm_timeout=None):
+              comm_cfg=None):
     # module-level for picklability (spawn). ``transport`` selects the
-    # wire: ("bus", mp queue boxes) or ("sock", address map) — the
-    # latter runs every agent as its own OS process talking TCP, the
-    # paper's distributed deployment (and the shape where pipelined
-    # rounds overlap with real parallelism, GIL-free).
+    # wire: ("bus", mp queue boxes), ("sock", address map) or
+    # ("grpc", address map) — the address-map kinds run every agent as
+    # its own OS process talking TCP, the paper's distributed
+    # deployment (and the shape where pipelined rounds overlap with
+    # real parallelism, GIL-free).
     kind, arg = transport
-    tkw = {} if comm_timeout is None else {"timeout": comm_timeout}
+    tkw = {} if comm_cfg is None else {"comm_cfg": comm_cfg}
     if kind == "bus":
         from repro.comm.process import ProcessBus, ProcessCommunicator
         bus = ProcessBus.__new__(ProcessBus)
@@ -210,6 +216,9 @@ def _mp_entry(role, transport, world, cfg, data, q, callbacks=None,
     elif kind == "sock":
         from repro.comm.sock import SocketCommunicator
         comm = SocketCommunicator(role, arg, **tkw)
+    elif kind == "grpc":
+        from repro.comm.grpc import GrpcCommunicator
+        comm = GrpcCommunicator(role, arg, **tkw)
     else:
         raise ValueError(f"unknown transport {kind!r}")
     out: Dict[str, Any] = {}
@@ -241,6 +250,16 @@ class VFLJob:
     so their in-memory state does not flow back. ``resume_dir`` restores
     a :class:`~repro.core.protocols.driver.Checkpointer` cut: fit
     continues mid-epoch from the saved (epoch, batch) position.
+
+    Example::
+
+        cfg = VFLConfig(protocol="split_nn", epochs=3)
+        with VFLJob(cfg, master, members, mode="grpc",
+                    pipeline_depth=2) as job:
+            fit = job.fit()              # callbacks, checkpoints
+            scores = job.predict()       # joint inference, same agents
+            metrics = job.evaluate()     # predict + protocol metrics
+        # __exit__ ran job.shutdown() and released every agent
     """
 
     def __init__(self, cfg: VFLConfig, master_data: MasterData,
@@ -248,13 +267,24 @@ class VFLJob:
                  callbacks: Sequence[Callback] = (),
                  resume_dir: Optional[str] = None,
                  pipeline_depth: Optional[int] = None,
-                 comm_timeout: Optional[float] = None):
+                 comm_timeout: Optional[float] = None,
+                 comm_cfg: Optional[CommCfg] = None):
         """``pipeline_depth`` overrides ``cfg.pipeline_depth`` (1 =
         synchronous lock-step, D >= 2 = bounded-staleness pipelining);
-        ``comm_timeout`` overrides each transport's per-message wait."""
+        ``comm_timeout`` overrides each transport's per-message wait;
+        ``comm_cfg`` configures the transports in full — timeouts,
+        Nagle, encode offload, and WAN link emulation
+        (:class:`~repro.comm.base.LinkSpec`), e.g.::
+
+            wan = CommCfg(link=LinkSpec(latency_ms=20))
+            VFLJob(cfg, master, members, mode="grpc", comm_cfg=wan)
+        """
         import dataclasses
         if pipeline_depth is not None:
             cfg = dataclasses.replace(cfg, pipeline_depth=pipeline_depth)
+        if comm_timeout is not None:
+            comm_cfg = dataclasses.replace(comm_cfg or CommCfg(),
+                                           timeout=comm_timeout)
         self.cfg = cfg
         self.mode = mode
         self.world = world_for(cfg, len(member_datas))
@@ -271,21 +301,19 @@ class VFLJob:
         self._procs: Dict[str, mp.Process] = {}
         self._q = None                      # process-mode exit results
 
-        if mode in ("thread", "socket"):
+        if mode in ("thread", "socket", "grpc"):
             self._cmd_q: Any = queue.Queue()
             self._res_q: Any = queue.Queue()
+            ckw = {} if comm_cfg is None else {"comm_cfg": comm_cfg}
             if mode == "thread":
                 bus = ThreadBus(self.world)
-                comms = {w: bus.communicator(
-                    w, **({} if comm_timeout is None
-                          else {"timeout": comm_timeout}))
-                    for w in self.world}
+                comms = {w: bus.communicator(w, **ckw)
+                         for w in self.world}
             else:
+                tcls = SocketCommunicator if mode == "socket" \
+                    else GrpcCommunicator
                 addrs = local_addresses(self.world)
-                comms = {w: SocketCommunicator(
-                    w, addrs, **({} if comm_timeout is None
-                                 else {"timeout": comm_timeout}))
-                    for w in self.world}
+                comms = {w: tcls(w, addrs, **ckw) for w in self.world}
             for w in self.world:
                 is_m = w == "master"
                 t = threading.Thread(
@@ -297,7 +325,7 @@ class VFLJob:
                     daemon=True)
                 self._threads.append(t)
                 t.start()
-        elif mode in ("process", "socket_proc"):
+        elif mode in ("process", "socket_proc", "grpc_proc"):
             ctx = mp.get_context("spawn")
             if mode == "process":
                 from repro.comm.process import ProcessBus
@@ -311,7 +339,8 @@ class VFLJob:
                 # one OS process per agent over real TCP — the paper's
                 # distributed deployment on one host; control replies
                 # still ride mp queues
-                transport = ("sock", local_addresses(self.world))
+                kind = "sock" if mode == "socket_proc" else "grpc"
+                transport = (kind, local_addresses(self.world))
             self._q = ctx.Queue()
             self._cmd_q = ctx.Queue()
             self._res_q = ctx.Queue()
@@ -323,7 +352,7 @@ class VFLJob:
                           self._q, list(callbacks), resume_dir,
                           self._cmd_q if is_m else None,
                           self._res_q if is_m else None,
-                          comm_timeout))
+                          comm_cfg))
                 # daemonized: an abandoned job (no shutdown) must not
                 # block interpreter exit on multiprocessing's atexit join
                 p.daemon = True
@@ -463,16 +492,23 @@ def run_vfl(cfg: VFLConfig, master_data: MasterData,
             member_datas: List[MemberData], mode: str = "thread",
             callbacks: Sequence[Callback] = (),
             resume_dir: Optional[str] = None,
-            pipeline_depth: Optional[int] = None) -> Dict[str, Any]:
+            pipeline_depth: Optional[int] = None,
+            comm_cfg: Optional[CommCfg] = None) -> Dict[str, Any]:
     """One-shot job (matching + training + teardown) in the given mode.
 
     Compatibility wrapper over :class:`VFLJob` — returns the per-role
     result dicts the old ``(master_fn, member_fn, arbiter_fn)`` runner
     produced. Use VFLJob directly when you need predict/evaluate or
     multiple phases on live agents.
+
+    Example::
+
+        res = run_vfl(cfg, master, members, mode="grpc",
+                      pipeline_depth=2)
+        print(res["master"]["history"][-1]["loss"])
     """
     job = VFLJob(cfg, master_data, member_datas, mode=mode,
                  callbacks=callbacks, resume_dir=resume_dir,
-                 pipeline_depth=pipeline_depth)
+                 pipeline_depth=pipeline_depth, comm_cfg=comm_cfg)
     job.fit()
     return job.shutdown()

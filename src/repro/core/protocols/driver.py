@@ -76,7 +76,31 @@ class VFLProtocol:
     One instance exists per agent; ``self.role`` says which hooks the
     driver will call. State set up in ``setup`` (weight slices, selected
     feature matrices) lives on ``self`` and is what ``state_dict`` /
-    ``load_state_dict`` checkpoint.
+    ``load_state_dict`` checkpoint. The hook lifecycle diagram lives in
+    docs/protocols.md.
+
+    Example (a minimal pipeline-capable protocol)::
+
+        @register
+        class MyProto(VFLProtocol):
+            name = "my_proto"
+            supports_pipeline = True
+
+            def setup(self):
+                self.w = np.zeros(...)            # role-local state
+
+            def on_batch_master(self, rows, step):
+                z = self.ch.recv("member0", "my/z").tensor("z")
+                self.ch.isend("member0", "my/r", {"r": z - y})
+                return float(loss)
+
+            def member_stage_send(self, rows, step):
+                self.ch.isend("master", "my/z", {"z": fwd(rows)})
+                return rows                       # ctx for recv stage
+
+            def member_stage_recv(self, rows, step, ctx):
+                r = self.ch.recv("master", "my/r").tensor("r")
+                self.apply(ctx, r)
     """
 
     name: str = "?"

@@ -207,7 +207,7 @@ def test_compression_error_feedback_accumulates_on_channel():
 
 
 @pytest.mark.parametrize("mode", ["thread", "socket", "process",
-                                  "socket_proc"])
+                                  "socket_proc", "grpc", "grpc_proc"])
 def test_depth1_linreg_bit_identical_all_modes(mode):
     """pipeline_depth=1 must reproduce the recorded seed traces
     bit-identically — the async engine under the hood changes nothing
@@ -227,7 +227,7 @@ def test_depth1_linreg_bit_identical_all_modes(mode):
                                    rtol=0, atol=0)
 
 
-@pytest.mark.parametrize("mode", ["thread", "socket"])
+@pytest.mark.parametrize("mode", ["thread", "socket", "grpc"])
 def test_depth1_splitnn_matches_trace(mode):
     cfg, master, members = _splitnn_case()
     cfg = dataclasses.replace(cfg, pipeline_depth=1)
@@ -384,12 +384,13 @@ def test_depth1_via_stage_hooks_equals_on_batch_member():
                                    rtol=0, atol=0)
 
 
-def test_pipelined_socket_mode_trains():
-    """Socket transport + depth 2 end-to-end (threads-in-one-process
-    deployment): arithmetic unaffected by the transport."""
+@pytest.mark.parametrize("mode", ["socket", "grpc"])
+def test_pipelined_socket_mode_trains(mode):
+    """TCP transports + depth 2 end-to-end (threads-in-one-process
+    deployment): arithmetic unaffected by the transport or framing."""
     cfg, master, members = _splitnn_case()
     ref = run_vfl(cfg, master, members, mode="thread", pipeline_depth=2)
-    got = run_vfl(cfg, master, members, mode="socket", pipeline_depth=2)
+    got = run_vfl(cfg, master, members, mode=mode, pipeline_depth=2)
     np.testing.assert_allclose(
         [h["loss"] for h in got["master"]["history"]],
         [h["loss"] for h in ref["master"]["history"]], rtol=1e-6)

@@ -1,0 +1,404 @@
+"""WAN-real transport stack (DESIGN.md §8): LinkSpec shaping observes
+the configured latency/bandwidth within tolerance (and latency overlaps
+across in-flight messages like real propagation delay), isend encode
+offload honors the snapshot contract and stays bit-identical to the
+seed traces at depth 1, and the gRPC-framed transport passes the same
+matrices as the socket transport — framing edge cases included."""
+import dataclasses
+import json
+import pathlib
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm.base import CommCfg, LinkSpec
+from repro.comm.grpc import (PREFACE, GrpcCommunicator, hpack_decode,
+                             hpack_encode)
+from repro.comm.local import ThreadBus
+from repro.comm.sock import SocketCommunicator, local_addresses
+from repro.core.party import run_vfl
+from repro.core.protocols.base import VFLConfig
+from repro.data.vertical import vertical_partition
+
+TRACES = json.loads(
+    (pathlib.Path(__file__).parent / "fixtures" / "seed_traces.json")
+    .read_text())
+
+
+def _linreg_case():
+    rng = np.random.default_rng(0)
+    n, d, items = 192, 12, 2
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, items))
+    y = x @ w * 0.4 + rng.normal(scale=0.05, size=(n, items))
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[4, 3],
+                                         overlap=1.0, seed=1)
+    cfg = VFLConfig(protocol="linreg", epochs=3, batch_size=48, lr=0.1,
+                    seed=0, use_psi=False)
+    return cfg, master, members
+
+
+def _sock_pair(comm_cls=SocketCommunicator, **cfg_kw):
+    addrs = local_addresses(["a", "b"])
+    cfg = CommCfg(**cfg_kw) if cfg_kw else None
+    ca = comm_cls("a", addrs, comm_cfg=cfg)
+    cb = comm_cls("b", addrs)
+    return ca, cb
+
+
+# ---------------------------------------------------------------------------
+# LinkSpec shaping
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comm_cls", [SocketCommunicator,
+                                      GrpcCommunicator])
+def test_link_latency_observed(comm_cls):
+    """A 60 ms one-way link delivers no earlier than ~60 ms and within
+    a loose upper tolerance (the host is 2-core and noisy)."""
+    ca, cb = _sock_pair(comm_cls, link=LinkSpec(latency_ms=60))
+    try:
+        t0 = time.perf_counter()
+        ca.send("b", "t", {"x": np.zeros(8)})
+        cb.recv("a", "t", timeout=10.0)
+        dt = time.perf_counter() - t0
+        assert 0.055 <= dt < 1.0, dt
+    finally:
+        ca.close(); cb.close()
+
+
+def test_link_latency_overlaps_inflight_messages():
+    """Latency is propagation, not occupancy: N back-to-back isends all
+    arrive ~latency later, NOT N * latency (the old naive sleep-in-line
+    model). FIFO order still holds."""
+    ca, cb = _sock_pair(link=LinkSpec(latency_ms=80))
+    try:
+        t0 = time.perf_counter()
+        for i in range(5):
+            ca.isend("b", f"t{i}", {"x": np.array([float(i)])})
+        seen = [cb.recv("a", f"t{i}", timeout=10.0).tensor("x")[0]
+                for i in range(5)]
+        dt = time.perf_counter() - t0
+        assert seen == [0.0, 1.0, 2.0, 3.0, 4.0]
+        assert 0.075 <= dt < 0.35, dt     # ~1x latency, not 5x (0.4s)
+    finally:
+        ca.close(); cb.close()
+
+
+def test_link_bandwidth_paces_throughput():
+    """1 MiB at 80 Mbit/s must take ~100 ms of serialization on top of
+    loopback (which is otherwise instant)."""
+    payload = {"x": np.zeros(1 << 17)}            # 1 MiB of float64
+    ca, cb = _sock_pair(link=LinkSpec(bandwidth_mbps=80))
+    try:
+        t0 = time.perf_counter()
+        ca.send("b", "big", {"x": payload["x"]})
+        cb.recv("a", "big", timeout=10.0)
+        dt = time.perf_counter() - t0
+        assert 0.09 <= dt < 1.0, dt
+    finally:
+        ca.close(); cb.close()
+
+
+def test_link_jitter_preserves_fifo():
+    rng_arrivals = []
+    ca, cb = _sock_pair(link=LinkSpec(latency_ms=5, jitter_ms=20))
+    try:
+        for i in range(8):
+            ca.isend("b", "j", {"x": np.array([float(i)])})
+        for i in range(8):
+            rng_arrivals.append(
+                cb.recv("a", "j", timeout=10.0).tensor("x")[0])
+        assert rng_arrivals == [float(i) for i in range(8)]
+    finally:
+        ca.close(); cb.close()
+
+
+def test_unshaped_default_has_no_sleep_path():
+    """CommCfg() with no link must keep the inline fast path (blocking
+    sends do not detour through the sender thread)."""
+    bus = ThreadBus(["m", "p"])
+    cm = bus.communicator("m", comm_cfg=CommCfg())
+    cp = bus.communicator("p")
+    cm.send("p", "t", {"x": np.zeros(1)})
+    cp.recv("m", "t")
+    assert cm.stats.async_sends == 0      # inline fast path taken
+
+
+def test_link_shaped_vfl_trains_and_is_bit_identical():
+    """Shaping delays delivery but never reorders or corrupts: a
+    shaped depth-1 linreg run still reproduces the seed trace exactly
+    (socket mode, small link so the test stays fast)."""
+    cfg, master, members = _linreg_case()
+    res = run_vfl(cfg, master, members, mode="socket",
+                  comm_cfg=CommCfg(link=LinkSpec(latency_ms=2)))
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["linreg"]["losses"], rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# encode offload: snapshot contract + bit identity
+# ---------------------------------------------------------------------------
+
+
+def test_encode_offload_snapshot_contract():
+    """A writeable array mutated right after isend must hit the wire
+    with its enqueue-time contents (copy-on-enqueue)."""
+    bus = ThreadBus(["m", "p"])
+    cm = bus.communicator("m", comm_cfg=CommCfg(encode_offload=True))
+    cp = bus.communicator("p")
+    x = np.arange(16.0)
+    fut = cm.isend("p", "snap", {"x": x})
+    x[:] = -1.0                           # mutate immediately
+    fut.result(5.0)
+    np.testing.assert_array_equal(cp.recv("m", "snap").tensor("x"),
+                                  np.arange(16.0))
+
+
+def test_encode_offload_readonly_view_of_writeable_base_is_copied():
+    """A read-only VIEW over a writeable base is still mutable through
+    the base — the snapshot must copy it, or an in-place weight update
+    after isend would change the bytes on the wire."""
+    bus = ThreadBus(["m", "p"])
+    cm = bus.communicator("m", comm_cfg=CommCfg(encode_offload=True))
+    cp = bus.communicator("p")
+    w = np.arange(8.0)
+    view = w.view()
+    view.flags.writeable = False
+    fut = cm.isend("p", "view", {"x": view})
+    w += 100.0                            # mutate through the base
+    fut.result(5.0)
+    np.testing.assert_array_equal(cp.recv("m", "view").tensor("x"),
+                                  np.arange(8.0))
+
+
+def test_link_jitter_seed_is_stable_across_interpreters():
+    """Jitter must be reproducible run-to-run (hash() is salted per
+    interpreter; spawned agent processes would otherwise jitter
+    differently every rep, breaking min-over-reps comparisons)."""
+    import subprocess
+    import sys
+    code = ("import sys; sys.path.insert(0, 'src');"
+            "from repro.comm.local import ThreadBus;"
+            "c = ThreadBus(['m']).communicator('m');"
+            "print(c._link_rng.random())")
+    outs = {subprocess.run([sys.executable, "-c", code], cwd=str(
+        pathlib.Path(__file__).parents[1]), capture_output=True,
+        text=True, check=True).stdout.strip() for _ in range(2)}
+    assert len(outs) == 1, outs
+
+
+def test_encode_offload_readonly_arrays_not_copied():
+    """Read-only buffers (jax exports, received tensors) satisfy the
+    snapshot contract for free and must not be copied."""
+    bus = ThreadBus(["m", "p"])
+    cm = bus.communicator("m", comm_cfg=CommCfg(encode_offload=True))
+    x = np.arange(16.0)
+    x.setflags(write=False)
+    msg, raw = cm._make("p", "t", {"x": x}, None, encode=False)
+    assert raw is None
+    assert msg.payload["x"] is x          # no defensive copy
+
+
+def test_encode_offload_error_is_not_sticky():
+    """An encode failure (unsupported dtype) surfaces on the future but
+    never touched the wire, so the engine keeps working."""
+    bus = ThreadBus(["m", "p"])
+    cm = bus.communicator("m", comm_cfg=CommCfg(encode_offload=True))
+    cp = bus.communicator("p")
+    bad = np.array([object()], dtype=object)
+    fut = cm.isend("p", "bad", {"x": bad})
+    with pytest.raises(TypeError):
+        fut.result(5.0)
+    cm.send("p", "ok", {"x": np.zeros(1)})       # engine still alive
+    assert cp.recv("m", "ok").tensor("x")[0] == 0.0
+
+
+@pytest.mark.parametrize("offload", [False, True])
+def test_encode_offload_bit_identical_depth1(offload):
+    """The tentpole's correctness bar: offloaded encode (the default)
+    and caller-side encode both reproduce the recorded seed traces
+    bit-identically at pipeline depth 1."""
+    cfg, master, members = _linreg_case()
+    res = run_vfl(cfg, master, members, mode="thread",
+                  comm_cfg=CommCfg(encode_offload=offload))
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["linreg"]["losses"], rtol=0, atol=0)
+    for j in range(2):
+        np.testing.assert_allclose(res[f"member{j}"]["w"],
+                                   TRACES["linreg"]["w_members"][j],
+                                   rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# gRPC transport: framing specifics (the mode matrix runs in
+# test_async_engine.py via parametrization)
+# ---------------------------------------------------------------------------
+
+
+def test_hpack_roundtrip_including_long_values():
+    hdrs = [(":path", "/repro.Party/Exchange"), ("grpc-agent", "m" * 300)]
+    assert hpack_decode(hpack_encode(hdrs)) == dict(hdrs)
+
+
+def test_grpc_wire_is_http2_shaped():
+    """The bytes a GrpcCommunicator puts on the wire start with the
+    HTTP/2 connection preface, a SETTINGS frame, and an HPACK hello."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    ca = GrpcCommunicator("a", {"a": local_addresses(["a"])["a"],
+                                "b": srv.getsockname()})
+    try:
+        ca.send("b", "t", {"x": np.zeros(2)})
+        conn, _ = srv.accept()
+        conn.settimeout(5.0)
+        buf = b""
+        while len(buf) < len(PREFACE) + 9:
+            buf += conn.recv(4096)
+        assert buf.startswith(PREFACE)
+        frame = buf[len(PREFACE):]
+        assert frame[3] == 0x4             # SETTINGS first
+        conn.close()
+    finally:
+        ca.close()
+
+
+def test_grpc_midstream_drop_attributed_and_raises():
+    """A peer dying with an open stream fails waiters fast (the hello
+    HEADERS on stream 1 attributed the connection)."""
+    addrs = local_addresses(["a", "b"])
+    cb = GrpcCommunicator("b", addrs, timeout=30.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        hello = hpack_encode([(":path", "/repro.Party/Hello"),
+                              ("grpc-agent", "a")])
+        from repro.comm.grpc import (FLAG_END_HEADERS, FLAG_END_STREAM,
+                                     FT_HEADERS, FT_SETTINGS, _frame)
+        conn.sendall(PREFACE + _frame(FT_SETTINGS, 0, 0, b"")
+                     + _frame(FT_HEADERS,
+                              FLAG_END_HEADERS | FLAG_END_STREAM, 1,
+                              hello))
+        # open a data stream, then die without END_STREAM
+        conn.sendall(_frame(FT_HEADERS, FLAG_END_HEADERS, 3,
+                            hpack_encode([(":path",
+                                           "/repro.Party/Exchange"),
+                                          ("grpc-agent", "a")])))
+        time.sleep(0.1)
+        conn.close()
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "never")
+        assert time.monotonic() - t0 < 5
+    finally:
+        cb.close()
+
+
+def test_grpc_corrupt_message_prefix_attributed():
+    """A stream whose gRPC length prefix disagrees with the delivered
+    body is a protocol violation from a known sender: waiters fail
+    fast instead of hanging out the timeout."""
+    from repro.comm.grpc import (FLAG_END_HEADERS, FLAG_END_STREAM,
+                                 FT_DATA, FT_HEADERS, FT_SETTINGS,
+                                 _frame)
+    addrs = local_addresses(["a", "b"])
+    cb = GrpcCommunicator("b", addrs, timeout=30.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        hello = hpack_encode([(":path", "/repro.Party/Hello"),
+                              ("grpc-agent", "a")])
+        conn.sendall(PREFACE + _frame(FT_SETTINGS, 0, 0, b"")
+                     + _frame(FT_HEADERS,
+                              FLAG_END_HEADERS | FLAG_END_STREAM, 1,
+                              hello))
+        conn.sendall(_frame(FT_HEADERS, FLAG_END_HEADERS, 3,
+                            hpack_encode([(":path",
+                                           "/repro.Party/Exchange"),
+                                          ("grpc-agent", "a")])))
+        # prefix claims 999 bytes, delivers 3, then END_STREAM
+        conn.sendall(_frame(FT_DATA, FLAG_END_STREAM, 3,
+                            b"\x00" + (999).to_bytes(4, "big") + b"xyz"))
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "never")
+        assert time.monotonic() - t0 < 5
+        conn.close()
+    finally:
+        cb.close()
+
+
+def test_grpc_truncated_hpack_attributed_not_thread_killing():
+    """Garbled HEADERS (HPACK block cut mid-integer) must mark the
+    sender down — not kill the listener thread unhandled."""
+    from repro.comm.grpc import (FLAG_END_HEADERS, FLAG_END_STREAM,
+                                 FT_HEADERS, FT_SETTINGS, _frame)
+    with pytest.raises(ValueError, match="HPACK"):
+        hpack_decode(b"\x00\x7f")          # length continuation cut off
+    addrs = local_addresses(["a", "b"])
+    cb = GrpcCommunicator("b", addrs, timeout=30.0)
+    try:
+        conn = socket.create_connection(addrs["b"])
+        hello = hpack_encode([(":path", "/repro.Party/Hello"),
+                              ("grpc-agent", "a")])
+        conn.sendall(PREFACE + _frame(FT_SETTINGS, 0, 0, b"")
+                     + _frame(FT_HEADERS,
+                              FLAG_END_HEADERS | FLAG_END_STREAM, 1,
+                              hello))
+        conn.sendall(_frame(FT_HEADERS, FLAG_END_HEADERS, 3,
+                            b"\x00\x7f"))  # truncated HPACK
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "never")
+        assert time.monotonic() - t0 < 5
+        conn.close()
+    finally:
+        cb.close()
+
+
+def test_commcfg_without_timeout_keeps_transport_default():
+    """A CommCfg passed only for shaping must not silently replace a
+    transport's deliberate timeout default (process mode runs 240 s
+    for slow spawn imports) or an explicit constructor timeout."""
+    from repro.comm.local import ThreadBus
+    from repro.comm.process import ProcessBus
+
+    bus = ProcessBus(["a", "b"])
+    c = bus.communicator("a", comm_cfg=CommCfg(link=LinkSpec(
+        latency_ms=1)))
+    assert c._timeout == 240.0
+    tb = ThreadBus(["a", "b"])
+    c2 = tb.communicator("a", timeout=33.0,
+                         comm_cfg=CommCfg(encode_offload=False))
+    assert c2._timeout == 33.0
+    c3 = tb.communicator("a", comm_cfg=CommCfg(timeout=7.0))
+    assert c3._timeout == 7.0
+
+
+def test_grpc_clean_close_between_streams_is_silent():
+    addrs = local_addresses(["a", "b"])
+    ca = GrpcCommunicator("a", addrs)
+    cb = GrpcCommunicator("b", addrs)
+    try:
+        ca.send("b", "t0", {"x": np.ones(3)})
+        ca.close()                          # boundary close
+        assert cb.recv("a", "t0").tensor("x")[0] == 1.0
+    finally:
+        cb.close()
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_grpc_pipelined_convergence(depth):
+    """The async-engine depth matrix on the gRPC transport: bounded
+    staleness training converges the same as on sockets."""
+    cfg, master, members = _linreg_case()
+    sync = run_vfl(cfg, master, members, mode="grpc")
+    res = run_vfl(cfg, master, members, mode="grpc",
+                  pipeline_depth=depth)
+    h = [r["loss"] for r in res["master"]["history"]]
+    h_sync = [r["loss"] for r in sync["master"]["history"]]
+    assert len(h) == len(h_sync)
+    assert h[-1] < 0.25 * h[0], h
+    assert h[-1] < 2.0 * h_sync[-1]
