@@ -1,0 +1,119 @@
+"""Bench-regression gate: compare a fresh ``bench.json`` against the
+committed ``benchmarks/results/baseline.json``.
+
+Two checks, either failing exits non-zero:
+
+1. **Presence** — every row in the required set exists in the fresh
+   results (the old CI row-presence check, kept).
+2. **Regression** — for every gated row (prefix-matched, present in
+   both files), ``new_us <= baseline_us * threshold``. The default
+   threshold of 1.5x absorbs host-speed variance between the 2-core
+   dev box that recorded the baseline and CI runners; both sides are
+   min-over-reps from the interleaved A/B protocol (see
+   ``bench_vfl_async``/``bench_comm_modes``), which is what makes the
+   comparison meaningful on noisy shared hosts in the first place.
+
+Baseline values are deliberately an **envelope** (per-row max across
+several recorded runs, including runs under adversarial parallel
+load — each row's ``derived`` field records the spread): the gate is
+tuned to never fail on host noise at the cost of only catching
+regressions that exceed the noisiest recorded run by the threshold.
+Tighten a row by re-recording its baseline on a quiet host once CI
+variance for it is known.
+
+Rows in the baseline but missing from the fresh run fail the gate too
+(a silently dropped bench is how perf coverage rots).
+
+  python benchmarks/check_regression.py \\
+      benchmarks/results/bench.json benchmarks/results/baseline.json \\
+      --threshold 1.5 --prefix vfl_async_ --prefix comm_
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+# Rows whose absolute magnitude is small enough (sub-ms loopback
+# latencies) that OS scheduling dominates: cross-run dispersion on an
+# otherwise idle 2-core host measures ~4x even with the interleaved
+# min-over-reps protocol, so a flat 1.5x gate would flake. These keep a
+# wider per-row threshold scaled to that measured dispersion — still a
+# hard gate, tuned to catch real regressions (e.g. a lost TCP_NODELAY
+# on the wire path) rather than scheduler noise.
+PER_ROW_THRESHOLD = {
+    "comm_socket_small_nagle": 4.0,
+    "comm_socket_small_nodelay": 4.0,
+    "comm_roundtrip_thread_256KiB": 4.0,
+}
+
+REQUIRED = {
+    "vfl_driver_seed_loop", "vfl_driver_lifecycle",
+    "vfl_async_splitnn_socket_d1", "vfl_async_splitnn_socket_d2",
+    "vfl_async_splitnn_socket_d4",
+    "vfl_async_splitnn_wan_d1", "vfl_async_splitnn_wan_d2",
+    "vfl_async_splitnn_wan_d4",
+    "vfl_async_logreg_he_overlap_d1", "vfl_async_logreg_he_overlap_d2",
+    "comm_socket_small_nagle", "comm_socket_small_nodelay",
+    "comm_roundtrip_grpc_256KiB",
+    "comm_isend_encode_inline", "comm_isend_encode_offload",
+}
+
+
+def _rows(path: str) -> Dict[str, float]:
+    return {r["name"]: float(r["us_per_call"])
+            for r in json.load(open(path))}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", help="fresh bench.json")
+    ap.add_argument("baseline", help="committed baseline.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when new > baseline * threshold "
+                         "(default 1.5)")
+    ap.add_argument("--prefix", action="append", default=None,
+                    help="row-name prefixes to gate (repeatable; "
+                         "default: vfl_async_ and comm_)")
+    args = ap.parse_args()
+    prefixes = tuple(args.prefix or ("vfl_async_", "comm_"))
+
+    new = _rows(args.bench)
+    base = _rows(args.baseline)
+    failures = []
+
+    missing = REQUIRED - set(new)
+    if missing:
+        failures.append(f"missing required bench rows: "
+                        f"{sorted(missing)}")
+
+    gated = sorted(n for n in base if n.startswith(prefixes))
+    if not gated:
+        failures.append(f"baseline has no rows matching {prefixes} — "
+                        f"regenerate baseline.json")
+    for name in gated:
+        if name not in new:
+            failures.append(f"{name}: in baseline but not in fresh "
+                            f"results (bench silently dropped?)")
+            continue
+        limit = PER_ROW_THRESHOLD.get(name, args.threshold)
+        ratio = new[name] / max(base[name], 1e-9)
+        status = "OK " if ratio <= limit else "REGRESSION"
+        print(f"{status} {name}: {new[name]:.1f}us vs baseline "
+              f"{base[name]:.1f}us (x{ratio:.2f}, limit x{limit})")
+        if ratio > limit:
+            failures.append(f"{name} regressed x{ratio:.2f} "
+                            f"(> x{limit})")
+
+    if failures:
+        print("\n".join(f"FAIL: {f}" for f in failures),
+              file=sys.stderr)
+        return 1
+    print(f"bench-regression gate: {len(gated)} rows OK, "
+          f"{len(REQUIRED)} required rows present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,23 @@ def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.2f},{derived}")
 
 
+# build-once synthetic dataset cache: every bench that needs a dataset
+# pulls it from here, so repeated rows (and repeated reps of the
+# interleaved A/B protocol) never pay generation again, and the build
+# cost is visible as its own ``dataset_build_*`` row instead of
+# polluting a workload row (WAN rows measure exchange, not data gen)
+_FIXTURES: dict = {}
+
+
+def dataset_fixture(name: str, builder: Callable):
+    if name not in _FIXTURES:
+        t0 = time.perf_counter()
+        _FIXTURES[name] = builder()
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"dataset_build_{name}", dt, "shared fixture, built once")
+    return _FIXTURES[name]
+
+
 def _timeit(fn: Callable, n: int = 5) -> float:
     fn()
     t0 = time.perf_counter()
@@ -73,53 +90,53 @@ def roundtrip(ca, cb, payload, n=10):
 
 
 def bench_comm_modes():
+    from repro.comm.grpc import GrpcCommunicator
     from repro.comm.local import ThreadBus
     from repro.comm.sock import SocketCommunicator, local_addresses
     payload = {"x": np.zeros((256, 256), np.float32)}   # 256 KiB
+    # the Nagle satellite rows use small control-sized messages
+    # (delayed-ACK interaction dominated the seed's small-message
+    # latency); the others compare framings at exchange size
+    small = {"x": np.zeros((32,), np.float32)}
 
     bus = ThreadBus(["a", "b"])
-    us = roundtrip(bus.communicator("a"), bus.communicator("b"), payload)
-    emit("comm_roundtrip_thread_256KiB", us, "mode=thread")
-    addrs = local_addresses(["a", "b"])
-    ca, cb = SocketCommunicator("a", addrs), SocketCommunicator("b", addrs)
-    try:
-        us = roundtrip(ca, cb, payload)
-        emit("comm_roundtrip_socket_256KiB", us, "mode=socket")
-    finally:
-        ca.close(); cb.close()
-
-    # the Nagle satellite: small control-sized messages before/after
-    # TCP_NODELAY (delayed-ACK interaction dominated the seed's
-    # small-message latency)
-    small = {"x": np.zeros((32,), np.float32)}
-    rows = {}
-    for nodelay in (False, True):
+    pairs = {"thread": (bus.communicator("a"), bus.communicator("b"))}
+    for name, cls in (("socket", SocketCommunicator),
+                      ("grpc", GrpcCommunicator)):
         addrs = local_addresses(["a", "b"])
-        ca = SocketCommunicator("a", addrs, nodelay=nodelay)
-        cb = SocketCommunicator("b", addrs, nodelay=nodelay)
-        try:
-            rows[nodelay] = roundtrip(ca, cb, small, n=20)
-        finally:
-            ca.close(); cb.close()
-    emit("comm_socket_small_nagle", rows[False], "nodelay=off")
+        pairs[name] = (cls("a", addrs), cls("b", addrs))
+    for name, nodelay in (("nagle", False), ("nodelay", True)):
+        addrs = local_addresses(["a", "b"])
+        pairs[name] = (SocketCommunicator("a", addrs, nodelay=nodelay),
+                       SocketCommunicator("b", addrs, nodelay=nodelay))
+    best = {k: float("inf") for k in pairs}
+    try:
+        # interleaved min-over-reps (the 2-core-host protocol, same as
+        # bench_vfl_async): one rep of every config per round, so
+        # capacity drift hits all configs alike and the reported min is
+        # comparable across runs — these rows feed the CI
+        # bench-regression gate (benchmarks/check_regression.py)
+        for _ in range(3):
+            for name, (ca, cb) in pairs.items():
+                p = small if name in ("nagle", "nodelay") else payload
+                n = 20 if name in ("nagle", "nodelay") else 10
+                best[name] = min(best[name], roundtrip(ca, cb, p, n=n))
+    finally:
+        for name, (ca, cb) in pairs.items():
+            if name != "thread":
+                ca.close(); cb.close()
+    emit("comm_roundtrip_thread_256KiB", best["thread"], "mode=thread")
+    emit("comm_roundtrip_socket_256KiB", best["socket"], "mode=socket")
+    emit("comm_socket_small_nagle", best["nagle"], "nodelay=off")
     # loopback ACKs immediately, so Nagle rarely stalls here — the row
     # records the before/after so real-link runs (where delayed ACK
     # costs up to 40ms per small exchange) have a baseline
-    emit("comm_socket_small_nodelay", rows[True],
-         f"speedup_x{rows[False] / max(rows[True], 1e-9):.2f}"
+    emit("comm_socket_small_nodelay", best["nodelay"],
+         f"speedup_x{best['nagle'] / max(best['nodelay'], 1e-9):.2f}"
          f" (loopback; guards WAN delayed-ACK stalls)")
-
     # gRPC-framed transport vs length-prefix framing: same safetensors
     # payloads, HTTP/2-like frames (DESIGN.md §8.1)
-    from repro.comm.grpc import GrpcCommunicator
-    addrs = local_addresses(["a", "b"])
-    ca = GrpcCommunicator("a", addrs)
-    cb = GrpcCommunicator("b", addrs)
-    try:
-        us = roundtrip(ca, cb, payload)
-        emit("comm_roundtrip_grpc_256KiB", us, "mode=grpc")
-    finally:
-        ca.close(); cb.close()
+    emit("comm_roundtrip_grpc_256KiB", best["grpc"], "mode=grpc")
 
 
 def bench_encode_offload():
@@ -157,17 +174,22 @@ def bench_encode_offload():
          f"speedup_x{best[False] / max(best[True], 1e-9):.2f}")
 
 
-def bench_table1_demo(quick: bool):
+def _recsys_demo_data():
     from repro.configs.vfl_recsys import VFLRecsysConfig
-    from repro.core.party import run_vfl
-    from repro.core.protocols.base import MasterData, MemberData, VFLConfig
+    from repro.core.protocols.base import MasterData, MemberData
     from repro.data.synthetic import make_recsys_silos
-    dcfg = VFLRecsysConfig().reduced()
-    data = make_recsys_silos(dcfg, seed=0)
+    data = make_recsys_silos(VFLRecsysConfig().reduced(), seed=0)
     master = MasterData(data.ids, data.labels.astype(np.float64),
                         data.features)
     members = [MemberData(i, x) for i, x in
                zip(data.member_ids, data.member_features)]
+    return master, members
+
+
+def bench_table1_demo(quick: bool):
+    from repro.core.party import run_vfl
+    from repro.core.protocols.base import MasterData, VFLConfig
+    master, members = dataset_fixture("recsys_demo", _recsys_demo_data)
     for proto, epochs, lr in (("linreg", 3, 0.05), ("split_nn", 3, 0.3)):
         cfg = VFLConfig(protocol=proto, epochs=epochs, batch_size=64,
                         lr=lr, use_psi=False, embedding_dim=16)
@@ -404,13 +426,16 @@ def bench_driver_overhead():
     from repro.core.party import run_vfl
     from repro.core.protocols.base import VFLConfig
     from repro.data.vertical import vertical_partition
-    rng = np.random.default_rng(0)
-    n, d = 512, 16
-    x = rng.normal(size=(n, d))
-    y = x @ rng.normal(size=(d, 2)) * 0.3
-    ids = [f"u{i:05d}" for i in range(n)]
-    master, members = vertical_partition(ids, x, y, widths=[6],
-                                         overlap=1.0, seed=1)
+
+    def _build():
+        rng = np.random.default_rng(0)
+        n, d = 512, 16
+        x = rng.normal(size=(n, d))
+        y = x @ rng.normal(size=(d, 2)) * 0.3
+        ids = [f"u{i:05d}" for i in range(n)]
+        return vertical_partition(ids, x, y, widths=[6],
+                                  overlap=1.0, seed=1)
+    master, members = dataset_fixture("linreg_512x16", _build)
     cfg = VFLConfig(protocol="linreg", epochs=4, batch_size=32, lr=0.05,
                     use_psi=False)
 
@@ -434,15 +459,22 @@ def bench_vfl_scaling():
     from repro.core.party import run_vfl
     from repro.core.protocols.base import VFLConfig
     from repro.data.vertical import vertical_partition
-    rng = np.random.default_rng(0)
     n, items = 192, 2
+
+    def _build():
+        rng = np.random.default_rng(0)
+        out = {}
+        for m in (1, 2, 4):
+            d = 6 + 4 * m
+            x = rng.normal(size=(n, d))
+            y = x @ rng.normal(size=(d, items)) * 0.3
+            ids = [f"u{i:05d}" for i in range(n)]
+            out[m] = vertical_partition(ids, x, y, widths=[4] * m,
+                                        seed=1)
+        return out
+    silos = dataset_fixture("scaling_192", _build)
     for n_members in (1, 2, 4):
-        d = 6 + 4 * n_members
-        x = rng.normal(size=(n, d))
-        y = x @ rng.normal(size=(d, items)) * 0.3
-        ids = [f"u{i:05d}" for i in range(n)]
-        master, members = vertical_partition(
-            ids, x, y, widths=[4] * n_members, seed=1)
+        master, members = silos[n_members]
         cfg = VFLConfig(protocol="split_nn", epochs=1, batch_size=48,
                         lr=0.1, use_psi=False, embedding_dim=8,
                         hidden=(16,))
@@ -460,12 +492,14 @@ def bench_compression():
     from repro.core.party import run_vfl
     from repro.core.protocols.base import VFLConfig
     from repro.data.vertical import vertical_partition
-    rng = np.random.default_rng(0)
-    n, d = 192, 12
-    x = rng.normal(size=(n, d))
-    y = (x @ rng.normal(size=(d, 3)) > 0).astype(np.float64)
-    ids = [f"u{i:05d}" for i in range(n)]
-    master, members = vertical_partition(ids, x, y, widths=[5], seed=1)
+    def _build():
+        rng = np.random.default_rng(0)
+        n, d = 192, 12
+        x = rng.normal(size=(n, d))
+        y = (x @ rng.normal(size=(d, 3)) > 0).astype(np.float64)
+        ids = [f"u{i:05d}" for i in range(n)]
+        return vertical_partition(ids, x, y, widths=[5], seed=1)
+    master, members = dataset_fixture("compress_192x12", _build)
     cfg = VFLConfig(protocol="split_nn", epochs=3, batch_size=48, lr=0.1,
                     use_psi=False, embedding_dim=8, hidden=(16,))
     for compress in (False, True):
@@ -520,15 +554,22 @@ def bench_vfl_async(quick: bool):
     saved = {k: os.environ.get(k) for k in caps}
     os.environ.update(caps)        # spawned agents inherit
     try:
-        rng = np.random.default_rng(0)
-        n, items = 8192, 8
-        widths = [32]
-        d = sum(widths) + 32
-        x = rng.normal(size=(n, d))
-        y = (x @ rng.normal(size=(d, items)) > 0).astype(np.float64)
-        ids = [f"u{i:06d}" for i in range(n)]
-        master, members = vertical_partition(ids, x, y, widths=widths,
-                                             overlap=1.0, seed=1)
+        def _build():
+            rng = np.random.default_rng(0)
+            n, items = 8192, 8
+            widths = [32]
+            d = sum(widths) + 32
+            x = rng.normal(size=(n, d))
+            y = (x @ rng.normal(size=(d, items)) > 0) \
+                .astype(np.float64)
+            ids = [f"u{i:06d}" for i in range(n)]
+            silos = vertical_partition(ids, x, y, widths=widths,
+                                       overlap=1.0, seed=1)
+            # raw arrays kept alongside the partition: the HE-overlap
+            # fixture below slices them instead of re-drawing
+            return {"ids": ids, "x": x, "y": y, "silos": silos}
+        master, members = dataset_fixture("async_8192x64",
+                                          _build)["silos"]
         cfg = VFLConfig(protocol="split_nn", epochs=2, batch_size=1024,
                         lr=0.05, use_psi=False, embedding_dim=256,
                         hidden=(32,))
@@ -578,9 +619,12 @@ def bench_vfl_async(quick: bool):
             emit(f"vfl_async_splitnn_wan_d{depth}", us,
                  f"{wan_info[depth]} rtt_ms=40 mode=grpc{extra}")
 
-        yb = y[:, :1]
-        m1, mem1 = vertical_partition(ids[:1024], x[:1024], yb[:1024],
-                                      widths=[32], seed=2)
+        def _build_he():
+            d = dataset_fixture("async_8192x64", _build)  # cache hit
+            yb = d["y"][:, :1]
+            return vertical_partition(d["ids"][:1024], d["x"][:1024],
+                                      yb[:1024], widths=[32], seed=2)
+        m1, mem1 = dataset_fixture("async_he_1024x64", _build_he)
         hcfg = VFLConfig(protocol="logreg_he", epochs=1,
                          batch_size=64 if quick else 128, lr=0.5,
                          use_psi=False, he_bits=256)

@@ -16,7 +16,10 @@ knob. Other knobs this demo inherits by default: ``he_packed=True``
 (SIMD Paillier for the arbitered protocol, DESIGN.md §3) and
 ``CommCfg.encode_offload=True`` (isend serialization off the critical
 path). Add ``comm_cfg=CommCfg(link=LinkSpec(latency_ms=20))`` to any
-job to emulate a WAN deployment (docs/transports.md).
+job to emulate a WAN deployment (docs/transports.md), or
+``CommCfg(tls=TLSSpec(...))`` to encrypt the TCP modes; to span real
+machines, the same protocol/config runs under the cluster launcher —
+see docs/deploy.md and examples/cluster/quickstart_cluster.toml.
 
   PYTHONPATH=src python examples/quickstart.py
 """

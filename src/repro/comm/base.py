@@ -37,6 +37,7 @@ from __future__ import annotations
 import abc
 import queue as queue_mod
 import random
+import ssl
 import threading
 import time
 import zlib
@@ -80,6 +81,64 @@ class LinkSpec:
 
 
 @dataclass(frozen=True)
+class TLSSpec:
+    """Mutual-TLS material for the TCP transports (``sock``/``grpc``
+    framings and their ``*_proc`` modes).
+
+    ``cert``/``key`` are this agent's PEM certificate chain and private
+    key; ``ca`` is the bundle used to verify *peers* (both directions —
+    the server requires a client certificate signed by the same CA, so
+    every connection is mutually authenticated, the deployment model
+    cross-organization VFL needs). ``server_hostname`` overrides the
+    name checked against the server certificate (default: the ``host``
+    from the address map); ``check_hostname=False`` skips the name
+    check while keeping chain verification.
+
+    Paths may contain an ``{agent}`` placeholder, resolved to the
+    communicator's own agent id — so one shared :class:`CommCfg` can
+    hand every agent its own certificate::
+
+        tls = TLSSpec(cert="certs/{agent}.crt", key="certs/{agent}.key",
+                      ca="certs/ca.crt")
+        job = VFLJob(cfg, master, members, mode="grpc_proc",
+                     comm_cfg=CommCfg(tls=tls))
+
+    Generate a repo-local test CA + per-agent certificates with
+    ``python -m repro.launch.certs`` (see docs/deploy.md). TLS wraps
+    the wire only — payload bytes are unchanged, so depth-1 runs over
+    TLS stay bit-identical to plaintext runs.
+    """
+
+    cert: str
+    key: str
+    ca: str
+    server_hostname: Optional[str] = None
+    check_hostname: bool = True
+
+    def resolve(self, agent: str) -> "TLSSpec":
+        """Substitute the ``{agent}`` placeholder in the paths."""
+        from dataclasses import replace
+        return replace(self,
+                       cert=self.cert.format(agent=agent),
+                       key=self.key.format(agent=agent),
+                       ca=self.ca.format(agent=agent))
+
+    def server_context(self) -> ssl.SSLContext:
+        ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+        ctx.load_cert_chain(self.cert, self.key)
+        ctx.load_verify_locations(self.ca)
+        ctx.verify_mode = ssl.CERT_REQUIRED      # mutual TLS
+        return ctx
+
+    def client_context(self) -> ssl.SSLContext:
+        ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_CLIENT)
+        ctx.load_cert_chain(self.cert, self.key)
+        ctx.load_verify_locations(self.ca)
+        ctx.check_hostname = self.check_hostname
+        return ctx
+
+
+@dataclass(frozen=True)
 class CommCfg:
     """Transport-independent communicator settings.
 
@@ -97,6 +156,9 @@ class CommCfg:
     thread instead of the caller (True, the default, shaves the
     caller's critical path; the payload is snapshotted on enqueue
     either way).
+    ``tls``: optional :class:`TLSSpec` — wrap every TCP connection
+    (``sock`` and ``grpc`` framings, thread and ``*_proc`` modes) in
+    mutually-authenticated TLS. Ignored by the in-memory transports.
 
     Example::
 
@@ -112,6 +174,7 @@ class CommCfg:
     nodelay: bool = True
     link: Optional[LinkSpec] = None
     encode_offload: bool = True
+    tls: Optional[TLSSpec] = None
 
 
 @dataclass

@@ -22,6 +22,10 @@ Scope (documented in docs/transports.md, internals in DESIGN.md §8):
 * Stream 1 is the connection hello (``:path /repro.Party/Hello`` +
   ``grpc-agent``), so a peer dying inside its very first data stream
   is still attributable and fails waiters fast.
+* ``CommCfg.tls`` applies here exactly as on the socket framing — the
+  shared ``_TcpCommunicator`` base wraps every connection in mutual
+  TLS before any frame moves, so ``mode="grpc"``/``"grpc_proc"`` run
+  encrypted with no change to the framing (docs/deploy.md).
 * Messages ride one stream each (odd ids, ascending): HEADERS
   (END_HEADERS) then DATA frames of at most 16384 bytes, the last
   flagged END_STREAM. The DATA body is the gRPC length-prefixed

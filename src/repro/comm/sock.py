@@ -5,7 +5,12 @@ safetensors blobs. Agents connect lazily and reuse sockets. Works across
 hosts; in tests everything binds to 127.0.0.1. The gRPC-style framed
 transport (``comm/grpc.py``) shares this module's server/connection
 machinery (:class:`_TcpCommunicator`) and differs only in the wire
-framing — see docs/transports.md for both wire formats.
+framing — see docs/transports.md for both wire formats. With
+``CommCfg.tls = TLSSpec(...)`` every connection (both framings, thread
+and ``*_proc`` modes) is wrapped in mutually-authenticated TLS; the
+frame/payload contract above the wire is unchanged, so TLS'd depth-1
+runs stay bit-identical to plaintext traces (docs/deploy.md covers
+certificate generation and the cluster launcher).
 
 Latency engineering (DESIGN.md §7): ``TCP_NODELAY`` is set on both the
 connecting and the accepted side (small control messages used to sit in
@@ -19,6 +24,7 @@ of hanging until the timeout.
 from __future__ import annotations
 
 import socket
+import ssl
 import struct
 import threading
 import time
@@ -88,6 +94,13 @@ class _TcpCommunicator(PartyCommunicator):
         self._down: Set[str] = set()
         self._nodelay = self.cfg.nodelay if comm_cfg is not None \
             else nodelay
+        # TLS (DESIGN.md §9): both framings (length-prefix and gRPC)
+        # ride the same ssl.SSLContext wrapping — the wire bytes change,
+        # the frame/payload contract above them does not
+        self._tls = self.cfg.tls.resolve(me) \
+            if self.cfg.tls is not None else None
+        self._srv_ctx = self._tls.server_context() if self._tls else None
+        self._cli_ctx = self._tls.client_context() if self._tls else None
         host, port = self._addr[me]
         deadline = time.monotonic() + min(self._timeout, 10.0)
         while True:
@@ -112,8 +125,28 @@ class _TcpCommunicator(PartyCommunicator):
                 return
             if self._nodelay:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            threading.Thread(target=self._serve_conn, args=(conn,),
+            threading.Thread(target=self._serve_entry, args=(conn,),
                              daemon=True).start()
+
+    def _serve_entry(self, conn: socket.socket) -> None:
+        """Per-connection thread: TLS-wrap (when configured), then hand
+        off to the framing's read loop. A failed handshake — plaintext
+        client against a TLS server, or an untrusted certificate — only
+        rejects THIS connection; the listener keeps serving."""
+        if self._srv_ctx is not None:
+            try:
+                # bound the handshake so a silent client can't wedge
+                # this thread forever; restore blocking mode after
+                conn.settimeout(min(self._timeout, 30.0))
+                conn = self._srv_ctx.wrap_socket(conn, server_side=True)
+                conn.settimeout(None)
+            except (OSError, ssl.SSLError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                return
+        self._serve_conn(conn)
 
     def _serve_conn(self, conn: socket.socket) -> None:
         raise NotImplementedError
@@ -154,6 +187,22 @@ class _TcpCommunicator(PartyCommunicator):
                     time.sleep(0.05)
             if self._nodelay:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self._cli_ctx is not None:
+                # handshake failures do NOT retry: a reachable peer that
+                # rejects our certificate (or presents an untrusted one)
+                # stays rejected — surface it immediately, attributed
+                sni = self._tls.server_hostname or self._addr[to][0]
+                try:
+                    conn = self._cli_ctx.wrap_socket(
+                        conn, server_hostname=sni)
+                except (OSError, ssl.SSLError) as e:
+                    try:
+                        conn.close()
+                    except OSError:
+                        pass
+                    raise ConnectionError(
+                        f"{self.me}: TLS handshake with {to!r} at "
+                        f"{self._addr[to]} failed: {e}") from e
             self._greet(conn)
             self._out[to] = conn
         return self._out[to]

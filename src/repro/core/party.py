@@ -361,6 +361,41 @@ class VFLJob:
         else:
             raise ValueError(f"unknown mode {mode!r}")
 
+    @classmethod
+    def from_spec(cls, spec, mode: Optional[str] = None,
+                  **kw) -> "VFLJob":
+        """Run a whole cluster spec in-process — every agent from the
+        spec's world, the spec's protocol/transport settings (TLS, link
+        shaping, timeouts), data built by the spec's provider — so a
+        deployment spec can be validated end-to-end on one machine
+        before ``python -m repro.launch.cluster`` distributes it.
+
+        The spec's ``[agents]``/``[hosts]`` address maps are ignored
+        here (local ports are auto-assigned); ``mode`` overrides the
+        execution mode (default: the spec's framing as threads,
+        ``"socket"``/``"grpc"``; pass e.g. ``"grpc_proc"`` for one OS
+        process per agent).
+
+        Example (the spec's ``[comm.tls]`` certificates must exist —
+        mint them once with the command in the spec's header, or drop
+        the table for a plaintext run)::
+
+            # python -m repro.launch.certs --dir examples/cluster/certs \\
+            #     --agents master member0 alpha beta
+            job = VFLJob.from_spec("examples/cluster/"
+                                   "quickstart_cluster.toml")
+            job.fit(); print(job.evaluate()["auc"]); job.shutdown()
+        """
+        from repro.launch.cluster import load_spec
+        spec = load_spec(spec)
+        spec.validate()
+        datas = {r: spec.build_data(r) for r in spec.world()}
+        members = [datas[f"member{i}"] for i in range(spec.n_members)]
+        if mode is None:
+            mode = "socket" if spec.framing == "sock" else "grpc"
+        kw.setdefault("comm_cfg", spec.comm)
+        return cls(spec.cfg, datas["master"], members, mode=mode, **kw)
+
     # -- phase API -----------------------------------------------------------
     # ``timeout`` bounds how long the job waits for the master's reply;
     # pass float("inf") for unbounded runs (e.g. --full demo scales).

@@ -1,0 +1,814 @@
+"""Multi-host cluster launcher: one spec file, one command per host.
+
+The paper pitches "easily deploy learning in a distributed environment";
+this module is the piece that makes the ``*_proc`` transport modes span
+real machines. A single TOML/JSON *cluster spec* names every agent's
+``host:port``, the transport (framing, timeouts, TLS, WAN shaping), the
+protocol configuration and the data provider; each participating host
+then runs::
+
+    python -m repro.launch.cluster spec.toml --host alpha
+
+and the launcher spawns/supervises that host's agents:
+
+* **Rendezvous** — agents bind their listeners first, then launchers
+  exchange readiness over a control channel (riding the transports'
+  connect-retry, so independently booting hosts link up in any order).
+* **Supervision** — a crashed agent's real traceback reaches the local
+  launcher within its 0.2 s poll tick and is fanned out to every peer
+  launcher over the control channel, so ALL launchers exit non-zero
+  within seconds instead of hanging until a transport timeout (the
+  cross-machine extension of the in-process dead-process watchdog).
+* **Shutdown** — SIGTERM to a launcher fans out SIGTERM to its agents
+  and notifies peers; per-agent stdout/stderr is captured under
+  ``--log-dir`` (``<role>.log``, plus ``pids.json`` and, on success,
+  ``summary.json``).
+
+Exit codes: 0 success · 1 agent failure (local or remote) · 2 spec or
+usage error · 3 rendezvous timeout · 143 terminated by signal.
+
+See docs/deploy.md for the spec schema and a two-machine walkthrough;
+``python -m repro.launch.certs`` mints the TLS material. For testing a
+spec without any launcher, ``VFLJob.from_spec(spec)`` runs the whole
+federation in-process over the spec's transport settings.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import multiprocessing as mp
+import os
+import pathlib
+import queue
+import signal
+import sys
+import time
+import traceback
+from dataclasses import dataclass, field, fields
+from typing import (Any, Callable, Dict, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.comm.base import CommCfg, LinkSpec, TLSSpec
+from repro.comm.grpc import GrpcCommunicator
+from repro.comm.sock import SocketCommunicator
+from repro.core.protocols.driver import Callback
+
+# ---------------------------------------------------------------------------
+# minimal TOML (Python 3.10 has no tomllib; the subset below covers
+# cluster specs: [table.sub] headers, strings, numbers, bools, arrays)
+# ---------------------------------------------------------------------------
+
+
+def _toml_scalar(s: str) -> Any:
+    s = s.strip()
+    if s.startswith('"') and s.endswith('"') and len(s) >= 2:
+        return s[1:-1]
+    if s.startswith("'") and s.endswith("'") and len(s) >= 2:
+        return s[1:-1]
+    if s == "true":
+        return True
+    if s == "false":
+        return False
+    if s.startswith("[") and s.endswith("]"):
+        body = s[1:-1].strip()
+        if not body:
+            return []
+        parts, depth, cur = [], 0, ""
+        for ch in body:
+            if ch == "," and depth == 0:
+                parts.append(cur)
+                cur = ""
+                continue
+            if ch == "[":
+                depth += 1
+            elif ch == "]":
+                depth -= 1
+            cur += ch
+        parts.append(cur)
+        # TOML allows a trailing comma in arrays
+        if parts and not parts[-1].strip():
+            parts.pop()
+        return [_toml_scalar(p) for p in parts]
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        pass
+    raise ValueError(f"unsupported TOML value: {s!r}")
+
+
+def parse_toml(text: str) -> Dict[str, Any]:
+    """Parse the cluster-spec TOML subset (uses :mod:`tomllib` when the
+    interpreter has it, Python >= 3.11)."""
+    try:
+        import tomllib
+        return tomllib.loads(text)
+    except ModuleNotFoundError:
+        pass
+    def _strip_comment(val: str) -> str:
+        out, quote = "", None
+        for ch in val:
+            if quote:
+                if ch == quote:
+                    quote = None
+            elif ch in "\"'":
+                quote = ch
+            elif ch == "#":
+                break
+            out += ch
+        return out
+
+    root: Dict[str, Any] = {}
+    table = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        ln, line = i + 1, lines[i].strip()
+        i += 1
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            table = root
+            for part in line[1:-1].strip().split("."):
+                table = table.setdefault(part.strip(), {})
+            continue
+        if "=" not in line:
+            raise ValueError(f"TOML line {ln}: expected key = value, "
+                             f"got {line!r} (parser supports the "
+                             f"cluster-spec subset; see docs/deploy.md)")
+        key, _, val = line.partition("=")
+        val = _strip_comment(val)
+        # multi-line arrays: keep consuming lines until brackets close
+        while val.count("[") > val.count("]"):
+            if i >= len(lines):
+                raise ValueError(f"TOML line {ln}: unterminated array "
+                                 f"for key {key.strip()!r}")
+            val += " " + _strip_comment(lines[i].strip())
+            i += 1
+        table[key.strip()] = _toml_scalar(val)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+
+
+def _addr(s: Union[str, Sequence[Any]]) -> Tuple[str, int]:
+    if isinstance(s, str):
+        host, _, port = s.rpartition(":")
+        return host, int(port)
+    host, port = s
+    return str(host), int(port)
+
+
+@dataclass
+class HostSpec:
+    """One launcher invocation: its control endpoint + owned agents."""
+    control: Tuple[str, int]
+    agents: List[str]
+
+
+@dataclass
+class ClusterSpec:
+    """Parsed cluster spec — everything a launcher (or
+    :meth:`~repro.core.party.VFLJob.from_spec`) needs to run the
+    federation.
+
+    Built from a TOML/JSON file via :func:`load_spec`; see
+    docs/deploy.md for the on-disk schema. All fields are plain
+    dataclasses, so a spec pickles into spawned agent processes as-is.
+
+    Example (``make_communicator`` needs the spec's TLS certificates
+    on disk — see ``python -m repro.launch.certs``)::
+
+        spec = load_spec("examples/cluster/quickstart_cluster.toml")
+        spec.validate()                            # no files touched
+        comm = spec.make_communicator("member0")   # TLS'd, full map
+        data = spec.build_data("member0")
+    """
+
+    cfg: Any                                  # VFLConfig
+    agents: Dict[str, Tuple[str, int]]
+    hosts: Dict[str, HostSpec]
+    comm: CommCfg = CommCfg()
+    framing: str = "grpc"                     # "sock" | "grpc"
+    run_phases: List[str] = field(default_factory=lambda: ["fit"])
+    data_provider: str = "repro.launch.cluster:quickstart_data"
+    data_kwargs: Dict[str, Any] = field(default_factory=dict)
+    barrier_timeout: float = 60.0
+    control_tls: bool = True
+    chaos: Optional[Tuple[str, int]] = None   # (role, crash-at-step)
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def n_members(self) -> int:
+        return sum(1 for a in self.agents if a.startswith("member"))
+
+    def world(self) -> List[str]:
+        from repro.core.party import world_for
+        return world_for(self.cfg, self.n_members)
+
+    def agents_of(self, host: str) -> List[str]:
+        if host not in self.hosts:
+            raise KeyError(f"host {host!r} not in spec "
+                           f"(hosts: {sorted(self.hosts)})")
+        return list(self.hosts[host].agents)
+
+    def validate(self) -> None:
+        expected = set(self.world())
+        have = set(self.agents)
+        if have != expected:
+            raise ValueError(
+                f"[agents] must name exactly the protocol's world "
+                f"{sorted(expected)}; got {sorted(have)}")
+        if self.framing not in ("sock", "grpc"):
+            raise ValueError(f"[comm] framing must be 'sock' or "
+                             f"'grpc', got {self.framing!r}")
+        assigned: List[str] = []
+        for hs in self.hosts.values():
+            assigned += hs.agents
+        if sorted(assigned) != sorted(have):
+            dup = {a for a in assigned if assigned.count(a) > 1}
+            missing = have - set(assigned)
+            unknown = set(assigned) - have
+            raise ValueError(
+                f"[hosts] must assign every agent to exactly one "
+                f"host (duplicates: {sorted(dup)}, unassigned: "
+                f"{sorted(missing)}, unknown: {sorted(unknown)})")
+        for phase in self.run_phases:
+            if phase not in ("fit", "evaluate", "predict"):
+                raise ValueError(f"[run] unknown phase {phase!r}")
+        if self.chaos is not None and self.chaos[0] not in have:
+            raise ValueError(f"[chaos] role {self.chaos[0]!r} is not "
+                             f"an agent")
+
+    # -- construction --------------------------------------------------------
+    def make_communicator(self, role: str):
+        """Build ``role``'s transport communicator with the full
+        address map and the spec's :class:`CommCfg` (TLS included)."""
+        cls = SocketCommunicator if self.framing == "sock" \
+            else GrpcCommunicator
+        return cls(role, dict(self.agents), comm_cfg=self.comm)
+
+    def control_comm(self, host: str) -> SocketCommunicator:
+        """The launcher↔launcher control channel: a tiny sock-framed
+        world of the host names, TLS'd like the data plane (unless
+        ``control_tls=false``)."""
+        addrs = {h: hs.control for h, hs in self.hosts.items()}
+        cfg = CommCfg(timeout=self.barrier_timeout,
+                      tls=self.comm.tls if self.control_tls else None)
+        return SocketCommunicator(host, addrs, comm_cfg=cfg)
+
+    def build_data(self, role: str):
+        """Call the spec's data provider for ``role`` (each host builds
+        its own agents' data locally — nothing raw crosses the wire)."""
+        modname, _, fname = self.data_provider.partition(":")
+        if not fname:
+            raise ValueError("[data] provider must be 'module:function'"
+                             f", got {self.data_provider!r}")
+        fn: Callable = getattr(importlib.import_module(modname), fname)
+        return fn(role, **self.data_kwargs)
+
+
+def load_spec(spec: Union[str, pathlib.Path, Dict[str, Any],
+                          ClusterSpec]) -> ClusterSpec:
+    """Load a cluster spec from a ``.toml``/``.json`` path, an
+    already-parsed dict, or pass a :class:`ClusterSpec` through.
+
+    Relative TLS certificate paths are resolved against the spec
+    file's directory (an ``{agent}`` placeholder survives resolution
+    and is substituted per agent by the transport).
+
+    Example::
+
+        spec = load_spec("examples/cluster/quickstart_cluster.toml")
+        print(spec.world(), spec.framing)
+    """
+    if isinstance(spec, ClusterSpec):
+        return spec
+    base = pathlib.Path(".")
+    if isinstance(spec, (str, pathlib.Path)):
+        path = pathlib.Path(spec)
+        base = path.parent
+        text = path.read_text()
+        raw = json.loads(text) if path.suffix == ".json" \
+            else parse_toml(text)
+    else:
+        raw = dict(spec)
+    return _spec_from_dict(raw, base)
+
+
+def _spec_from_dict(raw: Dict[str, Any],
+                    base: pathlib.Path) -> ClusterSpec:
+    from repro.core.protocols.base import VFLConfig
+    proto = dict(raw.get("protocol") or {})
+    name = proto.pop("name", None)
+    if name:
+        proto["protocol"] = name
+    valid = {f.name for f in fields(VFLConfig)}
+    unknown = set(proto) - valid
+    if unknown:
+        raise ValueError(f"[protocol] unknown VFLConfig fields "
+                         f"{sorted(unknown)} (valid: {sorted(valid)})")
+    proto = {k: tuple(v) if isinstance(v, list) else v
+             for k, v in proto.items()}
+    cfg = VFLConfig(**proto)
+
+    comm_raw = dict(raw.get("comm") or {})
+    framing = comm_raw.pop("framing", "grpc")
+    link = comm_raw.pop("link", None)
+    tls = comm_raw.pop("tls", None)
+    ckw: Dict[str, Any] = {}
+    for k in ("timeout", "nodelay", "encode_offload"):
+        if k in comm_raw:
+            ckw[k] = comm_raw.pop(k)
+    barrier = comm_raw.pop("barrier_timeout", 60.0)
+    control_tls = comm_raw.pop("control_tls", True)
+    if comm_raw:
+        raise ValueError(f"[comm] unknown keys {sorted(comm_raw)}")
+    if link is not None:
+        ckw["link"] = LinkSpec(**link)
+    if tls is not None:
+        def _p(p: str) -> str:
+            return p if os.path.isabs(p) else str(base / p)
+        ckw["tls"] = TLSSpec(
+            cert=_p(tls["cert"]), key=_p(tls["key"]), ca=_p(tls["ca"]),
+            server_hostname=tls.get("server_hostname"),
+            check_hostname=tls.get("check_hostname", True))
+
+    agents = {a: _addr(v) for a, v in (raw.get("agents") or {}).items()}
+    hosts = {h: HostSpec(control=_addr(hv["control"]),
+                         agents=list(hv.get("agents", [])))
+             for h, hv in (raw.get("hosts") or {}).items()}
+
+    run = dict(raw.get("run") or {})
+    data = dict(raw.get("data") or {})
+    provider = data.pop("provider",
+                        "repro.launch.cluster:quickstart_data")
+    chaos_raw = raw.get("chaos")
+    chaos = (chaos_raw["role"], int(chaos_raw["step"])) \
+        if chaos_raw else None
+
+    return ClusterSpec(
+        cfg=cfg, agents=agents, hosts=hosts, comm=CommCfg(**ckw),
+        framing=framing,
+        run_phases=list(run.get("phases", ["fit"])),
+        data_provider=provider, data_kwargs=data,
+        barrier_timeout=float(barrier), control_tls=bool(control_tls),
+        chaos=chaos)
+
+
+# ---------------------------------------------------------------------------
+# built-in data providers (each host rebuilds its slice locally from
+# the shared seed — deterministic, nothing raw crosses the wire)
+# ---------------------------------------------------------------------------
+
+
+def quickstart_data(role: str, seed: int = 0, **_: Any):
+    """The quickstart's SBOL-like two-silo recommendation dataset,
+    sliced for ``role`` (the cluster-spec default provider)."""
+    from repro.configs.vfl_recsys import VFLRecsysConfig
+    from repro.core.protocols.base import MasterData, MemberData
+    from repro.data.synthetic import make_recsys_silos
+    data = make_recsys_silos(VFLRecsysConfig().reduced(), seed=seed)
+    if role == "master":
+        return MasterData(data.ids, data.labels.astype(np.float64),
+                          data.features)
+    if role.startswith("member"):
+        i = int(role[len("member"):])
+        return MemberData(data.member_ids[i], data.member_features[i])
+    return None
+
+
+def linreg_demo_data(role: str, n: int = 192, d: int = 12,
+                     items: int = 2, widths: Sequence[int] = (4, 3),
+                     seed: int = 0, **_: Any):
+    """Tiny synthetic vertically-partitioned regression set — the
+    cheapest cluster smoke workload (no jax compute)."""
+    from repro.core.protocols.base import MasterData  # noqa: F401
+    from repro.data.vertical import vertical_partition
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, items))
+    y = x @ w * 0.4 + rng.normal(scale=0.05, size=(n, items))
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y,
+                                         widths=list(widths),
+                                         overlap=1.0, seed=1)
+    if role == "master":
+        return master
+    if role.startswith("member"):
+        return members[int(role[len("member"):])]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# agent child process
+# ---------------------------------------------------------------------------
+
+
+def _json_safe(obj: Any, _depth: int = 0) -> Any:
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    if isinstance(obj, (np.integer, np.floating)):
+        return obj.item()
+    if isinstance(obj, dict) and _depth < 4:
+        out = {}
+        for k, v in obj.items():
+            v = _json_safe(v, _depth + 1)
+            if v is not ...:
+                out[str(k)] = v
+        return out
+    if isinstance(obj, (list, tuple)) and _depth < 4 and len(obj) <= 64:
+        vals = [_json_safe(v, _depth + 1) for v in obj]
+        return [v for v in vals if v is not ...]
+    return ...                                 # dropped (arrays, objects)
+
+
+class _ChaosCrash(Callback):
+    """Driver callback that crashes its agent at a given step — the
+    knob the chaos CI job (and any user validating their supervision
+    story) flips via the spec's ``[chaos]`` table."""
+
+    def __init__(self, step: int):
+        self.step = step
+
+    def on_batch_end(self, driver, step, epoch, loss) -> None:
+        if step >= self.step:
+            raise RuntimeError(
+                f"chaos: injected crash at step {step}")
+
+
+def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
+                        status_q) -> None:
+    """Entry point of one spawned agent process (module-level for
+    spawn picklability). Reports ("ready"|"ok"|"error", role, info) on
+    ``status_q``; stdout/stderr land in ``log_path``."""
+    lf = open(log_path, "ab", buffering=0)
+    os.dup2(lf.fileno(), 1)
+    os.dup2(lf.fileno(), 2)
+    sys.stdout = os.fdopen(1, "w", buffering=1, closefd=False)
+    sys.stderr = os.fdopen(2, "w", buffering=1, closefd=False)
+    comm = None
+    try:
+        from repro.core.party import Arbiter, PartyMaster, PartyMember
+        comm = spec.make_communicator(role)
+        status_q.put(("ready", role, os.getpid()))
+        data = spec.build_data(role)
+        callbacks = [_ChaosCrash(spec.chaos[1])] \
+            if spec.chaos and spec.chaos[0] == role else []
+        if role == "master":
+            agent = PartyMaster(comm, spec.cfg, callbacks=callbacks)
+            summary: Dict[str, Any] = {}
+            for phase in spec.run_phases:
+                print(f"[{role}] phase {phase}", flush=True)
+                if phase == "fit":
+                    r = agent.fit(data)
+                    h = r["history"]
+                    summary["fit"] = {
+                        "n_common": r["n_common"], "steps": len(h),
+                        "first_loss": h[0]["loss"] if h else None,
+                        "final_loss": h[-1]["loss"] if h else None,
+                        "wall_s": h[-1]["wall_s"] if h else None}
+                elif phase == "evaluate":
+                    summary["evaluate"] = _json_safe(agent.evaluate())
+                elif phase == "predict":
+                    scores = agent.predict()
+                    summary["predict"] = {"rows": int(scores.shape[0])}
+            res = agent.shutdown()
+            summary["comm"] = _json_safe(res.get("comm"))
+            status_q.put(("ok", role, summary))
+        else:
+            agent = PartyMember(comm, spec.cfg, callbacks=callbacks) \
+                if role.startswith("member") \
+                else Arbiter(comm, spec.cfg, callbacks=callbacks)
+            res = agent.serve(data) if role.startswith("member") \
+                else agent.serve()
+            status_q.put(("ok", role,
+                          {"comm": _json_safe(res.get("comm"))}))
+    except BaseException:
+        tb = traceback.format_exc()
+        print(tb, file=sys.stderr, flush=True)
+        # the traceback must reach the supervisor BEFORE this process
+        # dies — the launcher turns it into its own exit diagnostics
+        status_q.put(("error", role, tb))
+        raise
+    finally:
+        if comm is not None:
+            comm.close()
+
+
+# ---------------------------------------------------------------------------
+# the launcher
+# ---------------------------------------------------------------------------
+
+
+class _ClusterFailed(Exception):
+    def __init__(self, code: int):
+        self.code = code
+
+
+class ClusterLauncher:
+    """Spawn + supervise one host's agents from a :class:`ClusterSpec`.
+
+    ``run()`` blocks until every local agent finished (exit 0), any
+    agent — local or on a peer launcher — failed (exit 1), rendezvous
+    timed out (exit 3), or :meth:`request_stop` was called (exit 143).
+    The CLI (``python -m repro.launch.cluster``) is a thin wrapper that
+    adds SIGTERM/SIGINT handling.
+
+    Example::
+
+        spec = load_spec("spec.toml")
+        rc = ClusterLauncher(spec, host="alpha",
+                             log_dir="runs/alpha").run()
+    """
+
+    POLL_S = 0.2
+
+    def __init__(self, spec: ClusterSpec, host: str,
+                 log_dir: Union[str, pathlib.Path] = "runs/cluster"):
+        spec.validate()
+        self.spec = spec
+        self.host = host
+        self.roles = spec.agents_of(host)
+        self.log_dir = pathlib.Path(log_dir)
+        self.peers = [h for h in spec.hosts if h != host]
+        self._stop = False
+        self._procs: Dict[str, mp.process.BaseProcess] = {}
+        self._ok: Dict[str, Any] = {}
+        self._exit_seen: Dict[str, float] = {}
+        self._ctl: Optional[SocketCommunicator] = None
+        self._fail_futs: Dict[str, Any] = {}
+
+    def request_stop(self) -> None:
+        """Ask ``run()`` to terminate local agents and exit 143 (wired
+        to SIGTERM/SIGINT by the CLI)."""
+        self._stop = True
+
+    # -- internals -----------------------------------------------------------
+    def _log(self, msg: str) -> None:
+        print(f"[launcher {self.host}] {msg}", flush=True)
+
+    def _terminate_local(self) -> None:
+        for p in self._procs.values():
+            if p.is_alive():
+                p.terminate()                 # SIGTERM fan-out
+        deadline = time.monotonic() + 5.0
+        for p in self._procs.values():
+            p.join(timeout=max(0.1, deadline - time.monotonic()))
+        for p in self._procs.values():
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=5.0)
+
+    def _broadcast_fail(self, role: str, tb: str) -> None:
+        if self._ctl is None:
+            return
+        try:
+            futs = self._ctl.broadcast(
+                "ctl/fail", {"ok": np.zeros(1)},
+                meta={"role": role, "traceback": tb[-16000:]},
+                wait=False)
+            for f in futs:
+                try:
+                    f.result(5.0)
+                except (TimeoutError, OSError):
+                    pass                       # peer already gone
+        except (OSError, RuntimeError):
+            pass
+
+    def _fail(self, role: str, tb: str, remote: bool = False) -> None:
+        origin = "peer launcher reported" if remote else "local"
+        self._log(f"agent {role} FAILED ({origin}); terminating "
+                  f"{len(self._procs)} local agent(s)")
+        sys.stderr.write(f"\n--- agent {role} failure ---\n{tb}\n")
+        sys.stderr.flush()
+        if not remote:
+            self._broadcast_fail(role, tb)
+        self._terminate_local()
+        raise _ClusterFailed(1)
+
+    def _check_peers(self) -> None:
+        for peer, fut in self._fail_futs.items():
+            if fut.done():
+                msg = fut.result(1.0)
+                self._fail(msg.meta.get("role", f"<{peer}>"),
+                           msg.meta.get("traceback", "(no traceback)"),
+                           remote=True)
+
+    def _drain_status(self, ready: Optional[set] = None) -> None:
+        while True:
+            try:
+                kind, role, info = self._status_q.get_nowait()
+            except queue.Empty:
+                return
+            if kind == "ready" and ready is not None:
+                ready.add(role)
+                self._pids[role] = info
+            elif kind == "ok":
+                self._ok[role] = info
+                self._log(f"agent {role} finished ok")
+            elif kind == "error":
+                self._fail(role, info)
+
+    def _check_deaths(self) -> None:
+        for role, p in self._procs.items():
+            if role in self._ok or p.exitcode is None:
+                continue
+            code = p.exitcode
+            # a dead agent's last "ok"/"error" message can still be in
+            # flight through the status queue's feeder thread — give
+            # it a grace window before calling the silence a failure,
+            # so a crash reports its REAL traceback, not this generic
+            # one. Clean exits get longer (the ok message may trail a
+            # big result); crashes flush their traceback pre-mortem,
+            # so a short window suffices and SIGKILL detection (which
+            # has nothing queued) stays fast.
+            grace = 5.0 if code == 0 else 1.5
+            first = self._exit_seen.setdefault(role, time.monotonic())
+            if time.monotonic() - first < grace:
+                continue
+            try:
+                why = f"signal {signal.Signals(-code).name}" \
+                    if code < 0 else f"exit code {code}"
+            except ValueError:
+                why = f"exit code {code}"
+            self._fail(role, f"agent process {role!r} died with "
+                             f"{why} before reporting a result "
+                             f"(no traceback available)")
+
+    def _tick(self, ready: Optional[set] = None) -> None:
+        if self._stop:
+            self._log("stop requested; terminating local agents")
+            self._broadcast_fail(
+                f"<{self.host}>", f"launcher on {self.host} was "
+                f"terminated by signal; cluster cannot continue")
+            self._terminate_local()
+            raise _ClusterFailed(143)
+        self._drain_status(ready)
+        self._check_deaths()
+        self._check_peers()
+        time.sleep(self.POLL_S)
+
+    # -- main ----------------------------------------------------------------
+    def run(self) -> int:
+        try:
+            return self._run()
+        except _ClusterFailed as e:
+            return e.code
+        finally:
+            if self._ctl is not None:
+                try:
+                    self._ctl.close()
+                except OSError:
+                    pass
+
+    def _run(self) -> int:
+        spec = self.spec
+        self.log_dir.mkdir(parents=True, exist_ok=True)
+        self._pids: Dict[str, int] = {}
+        ctx = mp.get_context("spawn")
+        self._status_q = ctx.Queue()
+
+        # control channel first, so peers can rendezvous with us while
+        # our agents are still importing
+        if self.peers:
+            self._ctl = spec.control_comm(self.host)
+            self._fail_futs = {p: self._ctl.irecv(p, "ctl/fail")
+                               for p in self.peers}
+            ready_futs = {p: self._ctl.irecv(p, "ctl/ready")
+                          for p in self.peers}
+
+        self._log(f"spawning {self.roles} (logs in {self.log_dir})")
+        for role in self.roles:
+            p = ctx.Process(
+                target=_cluster_agent_main,
+                args=(spec, role, str(self.log_dir / f"{role}.log"),
+                      self._status_q))
+            p.daemon = True
+            self._procs[role] = p
+            p.start()
+
+        # local readiness: every agent constructed its communicator
+        # (listener bound) — then join the cross-host barrier
+        ready: set = set()
+        deadline = time.monotonic() + spec.barrier_timeout
+        while len(ready) < len(self.roles):
+            self._tick(ready)
+            if time.monotonic() > deadline:
+                self._log("local agents not ready before "
+                          f"barrier_timeout={spec.barrier_timeout}s")
+                self._terminate_local()
+                return 3
+        (self.log_dir / "pids.json").write_text(json.dumps(self._pids))
+
+        if self.peers:
+            try:
+                self._ctl.broadcast("ctl/ready", {"ok": np.ones(1)},
+                                    meta={"host": self.host})
+            except (OSError, TimeoutError) as e:
+                self._log(f"rendezvous failed: {e}")
+                self._terminate_local()
+                return 3
+            waiting = set(self.peers)
+            while waiting:
+                self._tick()
+                waiting = {p for p in waiting
+                           if not ready_futs[p].done()}
+                if time.monotonic() > deadline:
+                    self._log(f"peers {sorted(waiting)} not ready "
+                              f"before barrier_timeout="
+                              f"{spec.barrier_timeout}s")
+                    self._terminate_local()
+                    return 3
+            self._log(f"rendezvous complete: "
+                      f"{sorted(spec.hosts)} all ready")
+
+        # supervise until every local agent reported ok
+        while len(self._ok) < len(self.roles):
+            self._tick()
+
+        summary = {"host": self.host, "agents": self._ok}
+        (self.log_dir / "summary.json").write_text(
+            json.dumps(summary, indent=1))
+        if "master" in self._ok:
+            print("CLUSTER-RESULT " + json.dumps(summary), flush=True)
+        if self._ctl is not None:
+            try:
+                self._ctl.broadcast("ctl/done", {"ok": np.ones(1)},
+                                    wait=False)
+                self._ctl.flush_sends(2.0)
+            except (OSError, TimeoutError, RuntimeError):
+                pass
+        self._log("all local agents finished ok")
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.cluster",
+        description="Launch and supervise this host's share of a VFL "
+                    "cluster from a shared spec file "
+                    "(docs/deploy.md).")
+    ap.add_argument("spec", help="path to the cluster spec "
+                                 "(.toml or .json)")
+    ap.add_argument("--host", help="which [hosts.<name>] entry this "
+                                   "invocation runs (optional when "
+                                   "the spec has exactly one host)")
+    ap.add_argument("--log-dir", default=None,
+                    help="per-agent log directory "
+                         "(default: runs/cluster/<host>)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the spec, print the launch plan, "
+                         "and exit")
+    args = ap.parse_args(argv)
+    try:
+        spec = load_spec(args.spec)
+        spec.validate()
+    except (OSError, ValueError, KeyError) as e:
+        print(f"spec error: {e}", file=sys.stderr)
+        return 2
+    if args.check:
+        print(f"protocol: {spec.cfg.protocol}  framing: {spec.framing}"
+              f"  tls: {'on' if spec.comm.tls else 'off'}")
+        for h, hs in spec.hosts.items():
+            print(f"host {h}: control {hs.control[0]}:{hs.control[1]}"
+                  f"  agents {hs.agents}")
+        for a, (ah, ap_) in spec.agents.items():
+            print(f"agent {a}: {ah}:{ap_}")
+        print("spec OK")
+        return 0
+    host = args.host
+    if host is None:
+        if len(spec.hosts) != 1:
+            print(f"--host required (spec has hosts "
+                  f"{sorted(spec.hosts)})", file=sys.stderr)
+            return 2
+        host = next(iter(spec.hosts))
+    if host not in spec.hosts:
+        print(f"unknown host {host!r} (spec has {sorted(spec.hosts)})",
+              file=sys.stderr)
+        return 2
+    launcher = ClusterLauncher(
+        spec, host,
+        log_dir=args.log_dir or f"runs/cluster/{host}")
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: launcher.request_stop())
+    return launcher.run()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
