@@ -46,6 +46,10 @@ PER_ROW_THRESHOLD = {
     "comm_socket_small_nagle": 4.0,
     "comm_socket_small_nodelay": 4.0,
     "comm_roundtrip_thread_256KiB": 4.0,
+    # in-process loopback rejoin: the recovery wait is ~1-2ms, so the
+    # row guards against the backoff/reset path regressing by orders
+    # of magnitude, not against sub-ms scheduling jitter
+    "vfl_rejoin_recovery_s": 4.0,
 }
 
 REQUIRED = {
@@ -58,6 +62,7 @@ REQUIRED = {
     "comm_socket_small_nagle", "comm_socket_small_nodelay",
     "comm_roundtrip_grpc_256KiB",
     "comm_isend_encode_inline", "comm_isend_encode_offload",
+    "vfl_rejoin_recovery_s",
 }
 
 

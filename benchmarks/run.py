@@ -651,6 +651,87 @@ def bench_vfl_async(quick: bool):
                 os.environ[k] = v
 
 
+def bench_rejoin():
+    """Elastic recovery cost (docs/deploy.md `[restart]`): member0
+    crashes mid-fit over real sockets, a fresh communicator restores
+    from its checkpoint and rejoins via the ctrl/rejoin handshake; the
+    row records the master's recovery wait (pause -> rejoin ack),
+    which the vfl_rejoin_ CI prefix gates against the baseline."""
+    import tempfile
+
+    from repro.comm.base import CommCfg
+    from repro.comm.sock import SocketCommunicator, local_addresses
+    from repro.core.party import PartyMaster, PartyMember
+    from repro.core.protocols.base import VFLConfig
+    from repro.core.protocols.driver import (Callback, Checkpointer,
+                                             ElasticCfg)
+    from repro.data.vertical import vertical_partition
+
+    class CrashAt(Callback):
+        def on_batch_end(self, driver, step, epoch, loss):
+            if step == 3:
+                raise RuntimeError("bench: injected crash")
+
+    def _build():
+        rng = np.random.default_rng(0)
+        n, d = 192, 12
+        x = rng.normal(size=(n, d))
+        y = x @ rng.normal(size=(d, 2)) * 0.4
+        ids = [f"u{i:05d}" for i in range(n)]
+        return vertical_partition(ids, x, y, widths=[4, 3],
+                                  overlap=1.0, seed=1)
+    master_data, member_datas = dataset_fixture("rejoin_192x12",
+                                                _build)
+    cfg = VFLConfig(protocol="linreg", epochs=3, batch_size=48,
+                    lr=0.1, seed=0, use_psi=False)
+    world = ["master", "member0", "member1"]
+    addrs = local_addresses(world)
+    ccfg = CommCfg(strict_eof=True, timeout=30.0)
+    comms = {w: SocketCommunicator(w, addrs, comm_cfg=ccfg)
+             for w in world}
+    ckpt = tempfile.mkdtemp(prefix="bench_rejoin_")
+
+    def survivor():
+        PartyMember(comms["member1"], cfg).serve(member_datas[1])
+
+    def victim():
+        try:
+            PartyMember(comms["member0"], cfg,
+                        callbacks=[Checkpointer(ckpt,
+                                                save_on_start=True),
+                                   CrashAt()]).serve(member_datas[0])
+        except RuntimeError:
+            pass
+        finally:
+            comms["member0"].close()          # the dead process's FIN
+
+    t_victim = threading.Thread(target=victim, daemon=True)
+
+    def rejoiner():
+        t_victim.join(60)
+        c = SocketCommunicator("member0", addrs, comm_cfg=ccfg)
+        PartyMember(c, cfg, resume_dir=ckpt).serve(member_datas[0],
+                                                   rejoin=True)
+
+    ts = [threading.Thread(target=survivor, daemon=True), t_victim,
+          threading.Thread(target=rejoiner, daemon=True)]
+    for t in ts:
+        t.start()
+    pm = PartyMaster(comms["master"], cfg,
+                     elastic=ElasticCfg(roles=frozenset({"member0"}),
+                                        wait_s=60.0))
+    t0 = time.perf_counter()
+    fit = pm.fit(master_data)
+    fit_s = time.perf_counter() - t0
+    pm.shutdown()
+    for t in ts:
+        t.join(60)
+    rec = fit["recoveries"][0]
+    emit("vfl_rejoin_recovery_s", rec["wait_s"] * 1e6,
+         f"wait_s={rec['wait_s']:.2f} at_step={rec['step']} "
+         f"fit_s={fit_s:.2f} steps={len(fit['history'])}")
+
+
 def bench_serving():
     """Decode throughput per family (reduced archs, CPU)."""
     import jax
@@ -708,6 +789,7 @@ def main() -> None:
     bench_kernels(args.quick)
     bench_driver_overhead()
     bench_vfl_async(args.quick)
+    bench_rejoin()
     bench_vfl_scaling()
     bench_compression()
     bench_serving()

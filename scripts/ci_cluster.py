@@ -1,21 +1,32 @@
 """CI cluster job: drive the real launcher CLI end-to-end.
 
-Two rounds, both as two launcher invocations ("hosts") on localhost
+Every round runs as two launcher invocations ("hosts") on localhost
 sharing one spec file, TLS on, gRPC framing (i.e. the TLS'd
-``grpc_proc`` deployment shape):
+``grpc_proc`` deployment shape). ``--scenario`` picks one round of
+the chaos matrix (the default ``all`` runs the tier-1 pair):
 
-1. **Convergence** — the quickstart split-NN cluster spec must run to
-   completion on both launchers (exit 0) with the training loss
-   strictly decreasing and the federated evaluate reporting a sane
-   AUC.
-2. **Chaos** — relaunch a long link-shaped run, SIGKILL one member
-   mid-epoch, and require BOTH launchers to exit non-zero within 30
-   seconds naming the dead member (no hang until a transport timeout).
+* **convergence** — the quickstart split-NN cluster spec must run to
+  completion on both launchers (exit 0) with the training loss
+  strictly decreasing and the federated evaluate reporting a sane
+  AUC.
+* **crash** — relaunch a long link-shaped run, SIGKILL one member
+  mid-epoch, and require BOTH launchers to exit non-zero within 30
+  seconds naming the dead member (no hang until a transport timeout).
+* **rejoin** — same kill, but with ``[restart]`` supervision on the
+  member: its launcher must respawn it, the master must accept the
+  rejoin, both launchers exit 0, and the final AUC lands within 0.01
+  of an uninterrupted reference run.
+* **partition** — a ``[chaos]`` blackhole on one member's link must
+  fail both launchers attributed, bounded by the transport timeout.
+* **slow** — a mid-run latency spike under ``round_deadline_s`` +
+  ``pipeline_depth=2`` must NOT fail the run: exit 0 with straggles
+  recorded in the summary.
 
 Exits non-zero on the first violated assertion, printing both
 launchers' output. Stdlib only.
 
   PYTHONPATH=src python scripts/ci_cluster.py [--workdir DIR]
+      [--scenario {all,convergence,crash,partition,slow,rejoin}]
 """
 from __future__ import annotations
 
@@ -47,7 +58,9 @@ def free_ports(n: int):
 
 
 def write_spec(path: pathlib.Path, certs: pathlib.Path, *,
-               protocol: str, epochs: int, extra: str = "") -> None:
+               protocol: str, epochs: int, extra: str = "",
+               timeout: float = 120.0,
+               protocol_extra: str = "") -> None:
     p = free_ports(4)
     path.write_text(f"""
 [protocol]
@@ -58,7 +71,7 @@ lr = 0.5
 seed = 0
 use_psi = true
 embedding_dim = 16
-
+{protocol_extra}
 [run]
 phases = ["fit", "evaluate"]
 
@@ -68,7 +81,7 @@ seed = 0
 
 [comm]
 framing = "grpc"
-timeout = 120.0
+timeout = {timeout}
 barrier_timeout = 120.0
 
 [comm.tls]
@@ -131,22 +144,44 @@ def check(cond: bool, what: str, outs=None) -> None:
     sys.exit(1)
 
 
-def round_convergence(wd: pathlib.Path, certs: pathlib.Path) -> None:
-    spec = wd / "quickstart.toml"
-    # 6 epochs at lr 0.5: past batch noise on the reduced-scale demo
-    # (AUC ~0.76 federated; 3 epochs at the demo lr stays at ~0.55)
-    write_spec(spec, certs, protocol="split_nn", epochs=6)
-    procs = {h: launch(spec, h, wd / "conv" / h)
+def run_pair(spec: pathlib.Path, log_root: pathlib.Path, *,
+             timeout: float):
+    procs = {h: launch(spec, h, log_root / h)
              for h in ("alpha", "beta")}
-    outs = wait_both(procs, timeout=600)
+    outs = wait_both(procs, timeout=timeout)
     rcs = {h: p.returncode for h, p in procs.items()}
-    check(rcs == {"alpha": 0, "beta": 0},
-          f"both launchers exited 0 (got {rcs})", outs)
+    return procs, outs, rcs
+
+
+def master_summary(outs) -> dict:
     result = next((ln for ln in outs["alpha"].splitlines()
                    if ln.startswith("CLUSTER-RESULT ")), None)
     check(result is not None, "master launcher printed CLUSTER-RESULT",
           outs)
-    summary = json.loads(result[len("CLUSTER-RESULT "):])
+    return json.loads(result[len("CLUSTER-RESULT "):])
+
+
+def wait_for_file(path: pathlib.Path, procs, timeout: float,
+                  what: str) -> None:
+    deadline = time.monotonic() + timeout
+    while not path.exists() and time.monotonic() < deadline:
+        if any(p.poll() is not None for p in procs.values()):
+            break
+        time.sleep(0.2)
+    check(path.exists(), what,
+          {h: (p.communicate()[0] if p.poll() is not None
+               else "(running)") for h, p in procs.items()})
+
+
+def round_convergence(wd: pathlib.Path, certs: pathlib.Path) -> float:
+    spec = wd / "quickstart.toml"
+    # 6 epochs at lr 0.5: past batch noise on the reduced-scale demo
+    # (AUC ~0.76 federated; 3 epochs at the demo lr stays at ~0.55)
+    write_spec(spec, certs, protocol="split_nn", epochs=6)
+    _, outs, rcs = run_pair(spec, wd / "conv", timeout=600)
+    check(rcs == {"alpha": 0, "beta": 0},
+          f"both launchers exited 0 (got {rcs})", outs)
+    summary = master_summary(outs)
     fit = summary["agents"]["master"]["fit"]
     check(fit["final_loss"] < fit["first_loss"],
           f"loss decreased ({fit['first_loss']:.4f} -> "
@@ -154,9 +189,10 @@ def round_convergence(wd: pathlib.Path, certs: pathlib.Path) -> None:
     auc = summary["agents"]["master"]["evaluate"].get("auc")
     check(auc is not None and auc > 0.7,
           f"federated evaluate AUC sane ({auc})", outs)
+    return float(auc)
 
 
-def round_chaos(wd: pathlib.Path, certs: pathlib.Path) -> None:
+def round_crash(wd: pathlib.Path, certs: pathlib.Path) -> None:
     spec = wd / "chaos.toml"
     # link shaping keeps the run going for minutes, so the kill always
     # lands mid-epoch; the launchers must still exit within seconds
@@ -165,14 +201,7 @@ def round_chaos(wd: pathlib.Path, certs: pathlib.Path) -> None:
     procs = {h: launch(spec, h, wd / "chaos" / h)
              for h in ("alpha", "beta")}
     pids = wd / "chaos" / "beta" / "pids.json"
-    deadline = time.monotonic() + 300
-    while not pids.exists() and time.monotonic() < deadline:
-        if any(p.poll() is not None for p in procs.values()):
-            break
-        time.sleep(0.2)
-    check(pids.exists(), "beta launcher reached readiness",
-          {h: (p.communicate()[0] if p.poll() is not None else "(running)")
-           for h, p in procs.items()})
+    wait_for_file(pids, procs, 300, "beta launcher reached readiness")
     time.sleep(10)                      # into the training loop
     t0 = time.monotonic()
     os.kill(json.loads(pids.read_text())["member0"], signal.SIGKILL)
@@ -189,9 +218,109 @@ def round_chaos(wd: pathlib.Path, certs: pathlib.Path) -> None:
               f"{host} launcher output names the dead member", outs)
 
 
+def round_rejoin(wd: pathlib.Path, certs: pathlib.Path) -> None:
+    # uninterrupted reference: the acceptance bar is |AUC delta| < 0.01
+    # against the exact same protocol config (convergence round spec)
+    ref_auc = round_convergence(wd, certs)
+
+    spec = wd / "rejoin.toml"
+    # link latency stretches fit so the kill lands well inside it; the
+    # restart block makes member0's death supervised instead of fatal
+    write_spec(spec, certs, protocol="split_nn", epochs=6,
+               extra=("[comm.link]\nlatency_ms = 40.0\n\n"
+                      "[restart.member0]\npolicy = \"on_failure\"\n"
+                      "backoff_s = 0.5\nbackoff_max_s = 2.0\n"
+                      "wait_s = 90.0\n"))
+    procs = {h: launch(spec, h, wd / "rejoin" / h)
+             for h in ("alpha", "beta")}
+    pids = wd / "rejoin" / "beta" / "pids.json"
+    wait_for_file(pids, procs, 300, "beta launcher reached readiness")
+    # the member's Checkpointer (save_on_start) writes its first cut
+    # when fit begins — killing after that is guaranteed mid-fit
+    ckpt = wd / "rejoin" / "beta" / "ckpt"
+    wait_for_file(ckpt / "member0.pkl", procs, 300,
+                  "member0 wrote its first checkpoint (fit started)")
+    time.sleep(3)                       # a few steps into the epoch
+    os.kill(json.loads(pids.read_text())["member0"], signal.SIGKILL)
+    print("SIGKILLed member0; waiting for supervised recovery ...")
+    outs = wait_both(procs, timeout=600)
+    rcs = {h: p.returncode for h, p in procs.items()}
+    check(rcs == {"alpha": 0, "beta": 0},
+          f"both launchers exited 0 after the recovery (got {rcs})",
+          outs)
+    summary = master_summary(outs)
+    recs = summary["agents"]["master"].get("recoveries") or []
+    check([r["role"] for r in recs] == ["member0"],
+          f"master recorded exactly one member0 recovery (got {recs})",
+          outs)
+    check(recs[0]["wait_s"] < 15.0,
+          f"recovery took {recs[0]['wait_s']:.1f}s (< 15s)", outs)
+    auc = summary["agents"]["master"]["evaluate"].get("auc")
+    check(auc is not None and abs(auc - ref_auc) < 0.01,
+          f"AUC within 0.01 of uninterrupted run "
+          f"({auc} vs {ref_auc})", outs)
+
+
+def round_partition(wd: pathlib.Path, certs: pathlib.Path) -> None:
+    spec = wd / "partition.toml"
+    # blackhole member0's link at step 5: sends "succeed" locally and
+    # vanish, so the master can only fail via its transport timeout —
+    # lowered here so the round is bounded
+    write_spec(spec, certs, protocol="split_nn", epochs=100,
+               timeout=20.0,
+               extra=("[chaos]\nrole = \"member0\"\nstep = 5\n"
+                      "scenario = \"partition\"\n"))
+    t0 = time.monotonic()
+    _, outs, rcs = run_pair(spec, wd / "partition", timeout=240)
+    dt = time.monotonic() - t0
+    check(all(rc not in (0, None) for rc in rcs.values()),
+          f"both launchers exited non-zero after the blackhole "
+          f"(got {rcs})", outs)
+    check(dt < 180.0, f"partition detected in {dt:.1f}s (< 180s)",
+          outs)
+    check("member0" in outs["alpha"],
+          "alpha launcher output attributes the partition", outs)
+
+
+def round_slow(wd: pathlib.Path, certs: pathlib.Path) -> None:
+    spec = wd / "slow.toml"
+    # member0's link latency jumps to 400ms at step 5; with a 150ms
+    # round deadline at depth 2 the master must substitute stale
+    # contributions instead of stalling — exit 0, straggles recorded
+    write_spec(spec, certs, protocol="split_nn", epochs=6,
+               protocol_extra=("pipeline_depth = 2\n"
+                               "round_deadline_s = 0.15\n"),
+               extra=("[chaos]\nrole = \"member0\"\nstep = 5\n"
+                      "scenario = \"slow\"\nlatency_ms = 400.0\n"))
+    _, outs, rcs = run_pair(spec, wd / "slow", timeout=600)
+    check(rcs == {"alpha": 0, "beta": 0},
+          f"both launchers exited 0 under the latency spike "
+          f"(got {rcs})", outs)
+    summary = master_summary(outs)
+    fit = summary["agents"]["master"]["fit"]
+    check(fit["final_loss"] < fit["first_loss"],
+          f"loss decreased ({fit['first_loss']:.4f} -> "
+          f"{fit['final_loss']:.4f})", outs)
+    straggles = (summary["agents"]["master"].get("comm") or {}) \
+        .get("straggles") or {}
+    check(sum(straggles.values()) > 0,
+          f"master recorded straggles (got {straggles})", outs)
+
+
+SCENARIOS = {
+    "convergence": round_convergence,
+    "crash": round_crash,
+    "rejoin": round_rejoin,
+    "partition": round_partition,
+    "slow": round_slow,
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workdir", default=None)
+    ap.add_argument("--scenario", default="all",
+                    choices=["all"] + sorted(SCENARIOS))
     args = ap.parse_args()
     wd = pathlib.Path(args.workdir or tempfile.mkdtemp(
         prefix="ci_cluster_"))
@@ -203,8 +332,13 @@ def main() -> None:
         env={**os.environ,
              "PYTHONPATH": str(REPO / "src")}).returncode
     check(rc == 0, "test CA + certificates minted")
-    round_convergence(wd, certs)
-    round_chaos(wd, certs)
+    if args.scenario == "all":
+        # the tier-1 pair every CI run gets; the rest of the matrix is
+        # dispatched per-scenario by the chaos-matrix workflow job
+        round_convergence(wd, certs)
+        round_crash(wd, certs)
+    else:
+        SCENARIOS[args.scenario](wd, certs)
     print("ci_cluster: ALL OK")
 
 

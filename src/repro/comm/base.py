@@ -60,7 +60,12 @@ class LinkSpec:
     the serialization rate in megabits/s (0 = unlimited);
     ``jitter_ms`` adds uniform-random extra delay in ``[0, jitter_ms]``
     per message (FIFO order is preserved — a jittered message never
-    overtakes an earlier one).
+    overtakes an earlier one). ``loss`` is a per-message drop
+    probability in ``[0, 1]``: dropped messages resolve their send
+    future normally (the sender believes the write succeeded, like a
+    blackholed IP route) and are counted in ``CommStats.link_dropped``;
+    ``loss=1.0`` blackholes the link entirely — the chaos ``partition``
+    scenario. Deliveries that do survive keep FIFO order.
 
     Latency is modeled as *propagation*: two messages enqueued
     back-to-back both arrive ~``latency_ms`` later, not 2x. Bandwidth
@@ -78,6 +83,7 @@ class LinkSpec:
     latency_ms: float = 0.0
     bandwidth_mbps: float = 0.0
     jitter_ms: float = 0.0
+    loss: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -159,6 +165,14 @@ class CommCfg:
     ``tls``: optional :class:`TLSSpec` — wrap every TCP connection
     (``sock`` and ``grpc`` framings, thread and ``*_proc`` modes) in
     mutually-authenticated TLS. Ignored by the in-memory transports.
+    ``strict_eof``: treat *any* EOF from an identified peer as a drop
+    (mark the sender down), not just mid-frame closes. Off by default —
+    the PR 5 attribution semantics, where a clean close between frames
+    is a normal shutdown — and switched on by elastic clusters, where a
+    SIGKILL'd agent's kernel-closed sockets often look like clean
+    closes and must still be detected within milliseconds. Only
+    meaningful when the master does no receives after its shutdown
+    broadcast (our drivers' discipline).
 
     Example::
 
@@ -175,6 +189,7 @@ class CommCfg:
     link: Optional[LinkSpec] = None
     encode_offload: bool = True
     tls: Optional[TLSSpec] = None
+    strict_eof: bool = False
 
 
 @dataclass
@@ -208,6 +223,12 @@ class CommStats:
     # payload accounting splits by phase with zero protocol involvement
     phase: str = "init"
     per_phase_bytes: Dict[str, int] = field(default_factory=dict)
+    # robustness accounting: rounds where the master proceeded with a
+    # stale contribution because a member missed its per-round deadline
+    # (keyed by the straggling peer), and messages the emulated link
+    # dropped (LinkSpec.loss / chaos partition)
+    straggles: Dict[str, int] = field(default_factory=dict)
+    link_dropped: int = 0
 
     def record_send(self, tag: str, nbytes: int, dt: float,
                     phase: Optional[str] = None):
@@ -234,6 +255,9 @@ class CommStats:
         self.recv_messages += 1
         self.recv_wait_s += wait
 
+    def record_straggle(self, peer: str):
+        self.straggles[peer] = self.straggles.get(peer, 0) + 1
+
     def as_dict(self) -> Dict[str, Any]:
         return {
             "sent_messages": self.sent_messages,
@@ -246,6 +270,8 @@ class CommStats:
             "async_sends": self.async_sends,
             "per_tag_bytes": dict(self.per_tag_bytes),
             "per_phase_bytes": dict(self.per_phase_bytes),
+            "straggles": dict(self.straggles),
+            "link_dropped": self.link_dropped,
         }
 
 
@@ -375,7 +401,15 @@ class PartyCommunicator(abc.ABC):
         self._submitted = 0
         self._completed = 0
         self._sender: Optional[threading.Thread] = None
-        self._send_exc: Optional[BaseException] = None
+        # wire errors are sticky PER PEER: after a partial write the
+        # stream to *that* peer may be mid-frame (each peer is its own
+        # connection/mailbox), so the engine never writes to it again —
+        # but streams to other peers stay healthy, which is what lets
+        # an elastic master keep serving survivors while one member is
+        # down. _suspect names the last peer whose write failed (crash
+        # attribution for the rejoin machinery).
+        self._send_errs: Dict[str, BaseException] = {}
+        self._suspect: Optional[str] = None
 
     # -- implementation hooks ------------------------------------------------
     @abc.abstractmethod
@@ -427,12 +461,14 @@ class PartyCommunicator(abc.ABC):
             item = self._sendq.get()
             if item is None:
                 return
-            # fail fast (and skip encode) once the wire errored: after a
-            # partial write the stream may be mid-frame, so the engine
-            # never writes again
+            to = item.msg.recipient
+            # fail fast (and skip encode) once the wire to this peer
+            # errored: after a partial write that stream may be
+            # mid-frame, so the engine never writes to it again
             with self._send_lock:
-                if self._send_exc is not None:
-                    self._finish_item(item, self._send_exc)
+                err = self._send_errs.get(to)
+                if err is not None:
+                    self._finish_item(item, err)
                     continue
             try:
                 deferred = item.raw is None
@@ -443,11 +479,20 @@ class PartyCommunicator(abc.ABC):
                 with self._send_lock:
                     self._finish_item(item, e)
                 continue
-            if self._link is not None:
+            link = self._link
+            if link is not None:
+                if link.loss and self._link_rng.random() < link.loss:
+                    # blackholed: the sender side believes the write
+                    # succeeded (futures resolve), nothing hits the wire
+                    with self._send_lock:
+                        self.stats.link_dropped += 1
+                        self._finish_item(item, None)
+                    continue
                 self._shape_delay(item.t_enq, len(raw))
             with self._send_lock:
-                if self._send_exc is not None:
-                    self._finish_item(item, self._send_exc)
+                err = self._send_errs.get(to)
+                if err is not None:
+                    self._finish_item(item, err)
                     continue
                 if deferred:       # caller didn't know the byte count
                     self.stats.record_send(item.msg.tag, len(raw), 0.0,
@@ -456,7 +501,8 @@ class PartyCommunicator(abc.ABC):
                 try:
                     self._send(item.msg, raw)
                 except BaseException as e:          # noqa: BLE001
-                    self._send_exc = e
+                    self._send_errs[to] = e
+                    self._suspect = to
                     item.future._resolve(e)
                 else:
                     t1 = time.perf_counter()
@@ -474,13 +520,15 @@ class PartyCommunicator(abc.ABC):
                                             name=f"sender-{self.me}")
             self._sender.start()
 
-    def _raise_pending_send_error(self) -> None:
-        # sticky by design: after a wire error the stream may be
-        # mid-frame, so the engine never writes again — every further
-        # send on this communicator fails with the original error
+    def _raise_pending_send_error(self, to: str) -> None:
+        # sticky by design: after a wire error the stream to that peer
+        # may be mid-frame, so the engine never writes to it again —
+        # every further send to the same peer fails with the original
+        # error (other peers' streams are unaffected)
         with self._send_lock:
-            if self._send_exc is not None:
-                raise self._send_exc
+            err = self._send_errs.get(to)
+            if err is not None:
+                raise err
 
     # -- public API ----------------------------------------------------------
     def _make(self, to: str, tag: str, payload: Payload,
@@ -532,7 +580,7 @@ class PartyCommunicator(abc.ABC):
             ...                      # overlap compute with the write
             fut.result(timeout=30)   # re-raises transport errors
         """
-        self._raise_pending_send_error()
+        self._raise_pending_send_error(to)
         t0 = time.perf_counter()
         msg, raw = self._make(to, tag, payload, meta,
                               encode=not self.cfg.encode_offload)
@@ -543,14 +591,18 @@ class PartyCommunicator(abc.ABC):
         """Blocking send. Fast path: when no async send is queued or in
         flight (and no link shaping is active), encode and write inline
         on the caller thread — no thread handoff."""
-        self._raise_pending_send_error()
+        self._raise_pending_send_error(to)
         t0 = time.perf_counter()
         if self._link is None:
             msg, raw = self._make(to, tag, payload, meta)
             with self._send_lock:
                 if self._submitted == self._completed:
                     t1 = time.perf_counter()
-                    self._send(msg, raw)
+                    try:
+                        self._send(msg, raw)
+                    except BaseException:
+                        self._suspect = to
+                        raise
                     self.stats.record_wire(0.0, time.perf_counter() - t1,
                                            was_async=False)
                     self.stats.record_send(tag, len(raw),
@@ -572,8 +624,43 @@ class PartyCommunicator(abc.ABC):
                 lambda: self._submitted == self._completed, timeout)
             if not ok:
                 raise TimeoutError("unflushed sends remain")
-            if self._send_exc is not None:
-                raise self._send_exc
+            if self._send_errs:
+                raise next(iter(self._send_errs.values()))
+
+    def set_link(self, link: Optional[LinkSpec]) -> None:
+        """Swap WAN emulation at runtime — the chaos scenarios'
+        mid-run toggle (``partition`` = ``LinkSpec(loss=1.0)``,
+        ``slow`` = inflated latency). Subsequent sends route through
+        the sender thread and see the new link; a message racing the
+        swap may be shaped under either spec (benign)."""
+        if link is not None and link == LinkSpec():
+            link = None                  # all-zero spec: no shaping
+        self._link = link
+
+    def suspects(self) -> set:
+        """Peers this communicator has evidence are down: failed
+        outbound writes here, plus transport-detected drops (TCP
+        framings override to add their ``_down`` set)."""
+        return {self._suspect} if self._suspect is not None else set()
+
+    def reset_peer(self, peer: str,
+                   keep_tags: Sequence[str] = ()) -> None:
+        """Forget all state for one peer so a restarted process can
+        re-handshake: clears its sticky send error and suspect mark,
+        and drops its undelivered inbound messages except tags with a
+        prefix in ``keep_tags`` (the control-plane tags a rejoiner's
+        hello may already ride on). Transports extend this to also
+        close cached connections and clear down-marks."""
+        with self._send_lock:
+            self._send_errs.pop(peer, None)
+            if self._suspect == peer:
+                self._suspect = None
+        pending = getattr(self, "_pending", None)
+        if pending is not None:
+            for key in list(pending):
+                if key[0] == peer and not any(
+                        key[1].startswith(k) for k in keep_tags):
+                    del pending[key]
 
     def recv(self, frm: str, tag: str,
              timeout: Optional[float] = None) -> Message:

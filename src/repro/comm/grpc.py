@@ -241,8 +241,11 @@ class GrpcCommunicator(_TcpCommunicator):
             # a clean close lands between frames with no stream open;
             # anything else (mid-frame partial read, an open stream,
             # bad preface/HPACK) means the peer died with a message on
-            # the wire — attribute it and fail waiters fast
-            if streams or isinstance(e, (_MidFrameClose, ValueError)):
+            # the wire — attribute it and fail waiters fast. strict_eof
+            # (elastic clusters) attributes even the clean close: a
+            # SIGKILL'd peer's kernel closes its sockets tidily.
+            if streams or isinstance(e, (_MidFrameClose, ValueError)) \
+                    or (self._strict_eof and sender is not None):
                 self._mark_down(sender)
             return
 

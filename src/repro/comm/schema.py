@@ -191,6 +191,19 @@ class TypedChannel:
         self._frame_recv_seq: Dict[str, int] = defaultdict(int)
         self._framing: Optional[_FrameBuffer] = None
         self.error_feedback = None       # lazily built ErrorFeedback
+        # elastic / straggler machinery — inert until the driver arms
+        # it. ``elastic_roles``: peers whose crashes are recoverable
+        # (their ConnectionErrors are converted into down-marks +
+        # stale substitution instead of propagating). ``down``: peers
+        # currently skipped — sends are dropped, gathers substitute the
+        # last delivered message. ``round_deadline``: per-round gather
+        # bound; a member that misses it is a straggler and its stale
+        # contribution is used (bounded-staleness semantics).
+        self.down: set = set()
+        self.elastic_roles: set = set()
+        self.round_deadline: Optional[float] = None
+        self._last_msg: Dict[tuple, Message] = {}
+        self._stale_futs: Dict[tuple, list] = {}
 
     # mirror the communicator's identity surface so match/protocol code
     # can treat a TypedChannel as "the comm with types"
@@ -269,23 +282,42 @@ class TypedChannel:
 
     def send(self, to: str, name: str, payload: Payload,
              meta: Optional[Dict[str, str]] = None) -> None:
-        mt, seq, payload, meta = self._prepare(to, name, payload, meta)
-        if self._framing is not None and self._framing.to == to:
-            self._framing.parts.append((name, seq, payload, meta))
-            return
-        self.comm.send(to, self._wire_tag(mt, seq), payload, meta=meta)
+        if to in self.down:
+            return          # dropped before seq/EF advance: the peer's
+        #                     whole channel state resets at rejoin
+        try:
+            mt, seq, payload, meta = self._prepare(to, name, payload,
+                                                   meta)
+            if self._framing is not None and self._framing.to == to:
+                self._framing.parts.append((name, seq, payload, meta))
+                return
+            self.comm.send(to, self._wire_tag(mt, seq), payload,
+                           meta=meta)
+        except ConnectionError:
+            if to not in self.elastic_roles:
+                raise
+            self.down.add(to)
 
     def isend(self, to: str, name: str, payload: Payload,
               meta: Optional[Dict[str, str]] = None
               ) -> Optional[SendFuture]:
         """Non-blocking typed send; returns the transport future (or
         None when buffered into an open frame)."""
-        mt, seq, payload, meta = self._prepare(to, name, payload, meta)
-        if self._framing is not None and self._framing.to == to:
-            self._framing.parts.append((name, seq, payload, meta))
+        if to in self.down:
             return None
-        return self.comm.isend(to, self._wire_tag(mt, seq), payload,
-                               meta=meta)
+        try:
+            mt, seq, payload, meta = self._prepare(to, name, payload,
+                                                   meta)
+            if self._framing is not None and self._framing.to == to:
+                self._framing.parts.append((name, seq, payload, meta))
+                return None
+            return self.comm.isend(to, self._wire_tag(mt, seq), payload,
+                                   meta=meta)
+        except ConnectionError:
+            if to not in self.elastic_roles:
+                raise
+            self.down.add(to)
+            return None
 
     def frame(self, to: str, wait: bool = True) -> "_FrameContext":
         """Coalesce every send to ``to`` inside the block into one wire
@@ -408,9 +440,104 @@ class TypedChannel:
                     futs.append(f)
         return futs
 
-    def gather(self, frm: Sequence[str], name: str) -> List[Message]:
-        futs = [self.irecv(f, name) for f in frm]
-        return [f.result(self.comm._timeout) for f in futs]
+    def gather(self, frm: Sequence[str], name: str,
+               timeout: Optional[float] = None,
+               stale_ok: bool = False) -> List[Message]:
+        """Collect one message per peer. Plain behavior (no deadline,
+        no elastic roles armed) is the classic blocking gather.
+
+        With ``self.round_deadline`` set (or an explicit ``timeout`` +
+        ``stale_ok``), a peer that misses the deadline is recorded as a
+        straggler and its LAST delivered message is substituted — the
+        bounded-staleness contribution; its late message is drained
+        opportunistically on a later gather. A peer whose connection
+        dropped (and is in ``elastic_roles``) is marked down and
+        likewise substituted until it rejoins."""
+        if timeout is None and self.round_deadline is not None:
+            timeout, stale_ok = self.round_deadline, True
+        self._drain_stale()
+        pairs = [(f, None if f in self.down else self.irecv(f, name))
+                 for f in frm]
+        out = []
+        for f, fut in pairs:
+            msg = None
+            if fut is not None:
+                try:
+                    msg = fut.result(
+                        self.comm._timeout if timeout is None
+                        else timeout)
+                except ConnectionError:
+                    if f not in self.elastic_roles:
+                        raise
+                    self.down.add(f)
+                    self._stale_futs.setdefault((f, name),
+                                                []).append(fut)
+                except TimeoutError:
+                    if not stale_ok:
+                        raise
+                    if (f, name) in self._last_msg:
+                        self.stats.record_straggle(f)
+                        self._stale_futs.setdefault((f, name),
+                                                    []).append(fut)
+                    else:
+                        # nothing cached yet (first round, process
+                        # cold start): bounded staleness can only
+                        # degrade to a contribution that exists, so
+                        # wait out the full transport timeout instead
+                        msg = fut.result(self.comm._timeout)
+            if msg is None:
+                msg = self._last_msg.get((f, name))
+                if msg is None:
+                    raise ConnectionError(
+                        f"{self.me}: {f!r} is down with no stale "
+                        f"{name!r} contribution cached to substitute")
+            elif stale_ok or f in self.elastic_roles:
+                self._last_msg[(f, name)] = msg
+            out.append(msg)
+        return out
+
+    def _drain_stale(self) -> None:
+        """Consume stragglers' late messages once they finally arrive
+        (their futures own channel positions that must be drained, or
+        the transport's pending store grows one entry per straggle)."""
+        for key, futs in list(self._stale_futs.items()):
+            left = []
+            for fut in futs:
+                if fut.done():
+                    try:
+                        self._last_msg[key] = fut.result(0.0)
+                    except Exception:        # noqa: BLE001
+                        pass
+                else:
+                    left.append(fut)
+            if left:
+                self._stale_futs[key] = left
+            else:
+                del self._stale_futs[key]
+
+    def reset_peer(self, peer: str, keep: Sequence[str] = ()) -> None:
+        """Zero all channel state for one peer so a restarted process
+        (whose counters start at 0) can re-handshake: sequence numbers,
+        reorder buffers, frame counters, stale caches, parked straggler
+        futures, and compression error-feedback residuals — except
+        message types listed in ``keep``."""
+        for d in (self._send_seq, self._recv_seq):
+            for key in list(d):
+                if key[0] == peer and key[1] not in keep:
+                    del d[key]
+        for key in list(self._reorder):
+            if key[0] == peer and key[1] not in keep:
+                del self._reorder[key]
+        for store in (self._last_msg, self._stale_futs):
+            for key in list(store):
+                if key[0] == peer:
+                    del store[key]
+        self._frame_send_seq.pop(peer, None)
+        self._frame_recv_seq.pop(peer, None)
+        if self.error_feedback is not None:
+            for k in list(self.error_feedback.residuals):
+                if k.startswith(f"{peer}/"):
+                    del self.error_feedback.residuals[k]
 
 
 class _FrameContext:

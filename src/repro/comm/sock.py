@@ -23,6 +23,7 @@ of hanging until the timeout.
 """
 from __future__ import annotations
 
+import random
 import socket
 import ssl
 import struct
@@ -91,7 +92,12 @@ class _TcpCommunicator(PartyCommunicator):
         self._pending: Dict[Tuple[str, str], list] = {}
         self._cv = threading.Condition()
         self._out: Dict[str, socket.socket] = {}
+        self._in: Set[socket.socket] = set()
+        self._in_lock = threading.Lock()
         self._down: Set[str] = set()
+        # elastic clusters: any EOF from an identified peer is a drop
+        # (SIGKILL's kernel-closed sockets look like clean closes)
+        self._strict_eof = self.cfg.strict_eof
         self._nodelay = self.cfg.nodelay if comm_cfg is not None \
             else nodelay
         # TLS (DESIGN.md §9): both framings (length-prefix and gRPC)
@@ -146,7 +152,20 @@ class _TcpCommunicator(PartyCommunicator):
                 except OSError:
                     pass
                 return
-        self._serve_conn(conn)
+        # track the accepted socket so close() can tear it down: an
+        # agent that exits (or restarts, freeing its port for the
+        # respawn to rebind) must not leave inbound connections open
+        with self._in_lock:
+            self._in.add(conn)
+        try:
+            self._serve_conn(conn)
+        finally:
+            with self._in_lock:
+                self._in.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
 
     def _serve_conn(self, conn: socket.socket) -> None:
         raise NotImplementedError
@@ -174,17 +193,31 @@ class _TcpCommunicator(PartyCommunicator):
         if to not in self._out:
             # peers boot independently (one process per agent): retry
             # refused connects until the peer's listener is up, bounded
-            # by the configured timeout
+            # by the configured timeout. Exponential backoff with
+            # jitter, not a fixed busy-loop — a rejoin storm of agents
+            # reconnecting to a peer that stays down for seconds must
+            # not hammer it 20x/s each, and the jitter de-synchronizes
+            # the herd.
             deadline = time.monotonic() + self._timeout
+            delay, attempts = 0.05, 0
             while True:
                 try:
                     conn = socket.create_connection(
                         self._addr[to], timeout=self._timeout)
                     break
-                except ConnectionRefusedError:
-                    if time.monotonic() > deadline:
-                        raise
-                    time.sleep(0.05)
+                except ConnectionRefusedError as e:
+                    attempts += 1
+                    now = time.monotonic()
+                    if now >= deadline:
+                        raise ConnectionError(
+                            f"{self.me}: could not connect to {to!r} at "
+                            f"{self._addr[to]} within {self._timeout}s "
+                            f"({attempts} attempts): {e}") from e
+                    # full jitter in [delay/2, delay], capped to both
+                    # the growth ceiling and the remaining deadline
+                    time.sleep(min(delay * (0.5 + 0.5 * random.random()),
+                                   max(deadline - now, 0.0)))
+                    delay = min(delay * 2.0, 2.0)
             if self._nodelay:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             if self._cli_ctx is not None:
@@ -254,14 +287,60 @@ class _TcpCommunicator(PartyCommunicator):
         with self._cv:
             return any(self._pending.get((frm, t)) for t in tags)
 
+    def suspects(self) -> Set[str]:
+        with self._cv:
+            down = set(self._down)
+        return down | super().suspects()
+
+    def reset_peer(self, peer: str,
+                   keep_tags: Sequence[str] = ()) -> None:
+        """Forget one peer entirely so its restarted process can
+        re-handshake: clear the sticky send error and down-mark, close
+        the cached outbound socket (the next send reconnects to the new
+        listener), and drop undelivered inbound messages except
+        control-plane tags (``keep_tags`` prefixes) a rejoiner's hello
+        may already ride on."""
+        with self._send_lock:
+            self._send_errs.pop(peer, None)
+            if self._suspect == peer:
+                self._suspect = None
+        out = self._out.pop(peer, None)
+        if out is not None:
+            try:
+                out.close()
+            except OSError:
+                pass
+        with self._cv:
+            self._down.discard(peer)
+            for key in list(self._pending):
+                if key[0] == peer and not any(
+                        key[1].startswith(k) for k in keep_tags):
+                    del self._pending[key]
+
     def close(self) -> None:
         super().close()                  # drain + stop the sender thread
         self._alive = False
         try:
+            # shutdown() before close(): the listener thread is blocked
+            # in accept(), which (on Linux) pins the kernel socket — a
+            # bare close() would leave the port in LISTEN until that
+            # accept returned, so a restarted agent could never rebind
+            self._server.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
             self._server.close()
         except OSError:
             pass
+        self._listener.join(timeout=5)
         for c in self._out.values():
+            try:
+                c.close()
+            except OSError:
+                pass
+        with self._in_lock:
+            pending_in = list(self._in)
+        for c in pending_in:
             try:
                 c.close()
             except OSError:
@@ -305,8 +384,11 @@ class SocketCommunicator(_TcpCommunicator):
             # a clean close lands exactly between frames; a drop with
             # bytes outstanding (inside the body — mid_frame — or even
             # inside the next length prefix, _MidFrameClose) means the
-            # peer died with a message on the wire
-            if mid_frame or isinstance(e, _MidFrameClose):
+            # peer died with a message on the wire. strict_eof (elastic
+            # clusters) treats even the clean close as a drop: a
+            # SIGKILL'd peer's kernel closes its sockets tidily.
+            if mid_frame or isinstance(e, _MidFrameClose) \
+                    or (self._strict_eof and sender is not None):
                 self._mark_down(sender)
             return
 

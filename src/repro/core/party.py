@@ -50,6 +50,7 @@ from repro.core.protocols.driver import Callback, Driver, load_checkpoint
 from repro.core.protocols import linreg as _linreg        # noqa: F401
 from repro.core.protocols import logreg as _logreg        # noqa: F401
 from repro.core.protocols import split_nn as _split_nn    # noqa: F401
+from repro.core.protocols import secure_agg as _sec_agg   # noqa: F401
 
 
 def world_for(cfg: VFLConfig, n_members: int) -> List[str]:
@@ -79,7 +80,8 @@ class VFLAgent:
 
     def __init__(self, comm: PartyCommunicator, cfg: VFLConfig,
                  callbacks: Sequence[Callback] = (),
-                 resume_dir: Optional[str] = None):
+                 resume_dir: Optional[str] = None,
+                 elastic=None):
         self.comm = comm
         self.cfg = cfg
         proto_cls = resolve_protocol(cfg.protocol)
@@ -88,7 +90,7 @@ class VFLAgent:
         resume = load_checkpoint(resume_dir, comm.me) if resume_dir \
             else None
         self.driver = Driver(proto, callbacks=callbacks,
-                             resume_state=resume)
+                             resume_state=resume, elastic=elastic)
 
 
 class PartyMaster(VFLAgent):
@@ -120,9 +122,17 @@ class PartyMember(VFLAgent):
 
     role = "member"
 
-    def serve(self, data: MemberData) -> Dict[str, Any]:
+    def serve(self, data: MemberData,
+              rejoin: bool = False) -> Dict[str, Any]:
+        """``rejoin=True`` is the restarted-agent entry: state was
+        restored from ``resume_dir`` (the checkpoint carries the
+        matched order, so ``prepare`` does no matching comm) and the
+        member enters the master's paused fit via the ``ctrl/rejoin``
+        handshake instead of waiting for a phase announcement."""
         try:
             self.driver.prepare(data)
+            if rejoin:
+                return self.driver.rejoin_follow()
             return self.driver.follow()
         finally:
             self.driver.proto.close()

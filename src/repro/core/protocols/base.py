@@ -60,6 +60,12 @@ class VFLConfig:
     # communicator) and mask their embeddings; masks cancel in the
     # master's sum, so the master only ever sees the aggregate.
     secure_agg: bool = False
+    # straggler tolerance (elastic clusters): at pipeline_depth >= 2, a
+    # member whose per-round contribution misses this deadline (seconds)
+    # has its LAST delivered message substituted (bounded staleness) and
+    # the straggle recorded in CommStats. 0 = disabled (wait forever,
+    # i.e. the transport timeout).
+    round_deadline_s: float = 0.0
 
 
 @dataclass
@@ -201,6 +207,20 @@ def batches(n: int, cfg: VFLConfig, epoch: int):
     perm = batch_order(n, cfg, epoch)
     for lo, hi in batch_bounds(n, cfg):
         yield perm[lo:hi]
+
+
+def fit_rows(arr, n: int):
+    """Fit ``arr`` to ``n`` rows along axis 0: identity when it already
+    matches, else truncate or zero-pad. Stale contributions substituted
+    for a down/straggling peer can carry a different (tail-)batch row
+    count than the round being computed; this keeps the master's math
+    shape-consistent until the peer catches up."""
+    if arr.shape[0] == n:
+        return arr
+    if arr.shape[0] > n:
+        return arr[:n]
+    pad = [(0, n - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, pad)
 
 
 # ---------------------------------------------------------------------------

@@ -35,10 +35,12 @@ query rows are explicit.
 """
 from __future__ import annotations
 
+import os
 import pickle
 import queue
 import time
 from collections import deque
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -68,6 +70,19 @@ schema.message("ctrl/step",
                doc="one driver round: train batch / eval chunk / end")
 schema.message("predict/rows", {"rows": Field("int64", 1)}, stepped=True,
                doc="explicit query rows (indices into the matched order)")
+schema.message("ctrl/rejoin", {"step": Field("int64", 1)}, stepped=True,
+               doc="rejoin handshake: restarted member hello (its "
+                   "restored step) / master ack (its global step)")
+
+
+@dataclass
+class ElasticCfg:
+    """Master-side elastic policy: which peers may crash and rejoin
+    mid-fit (the launcher derives this from the spec's ``[restart]``
+    section), and how long the master waits for a restarted peer's
+    ``ctrl/rejoin`` hello before giving up and failing the run."""
+    roles: frozenset = frozenset()
+    wait_s: float = 60.0
 
 
 class VFLProtocol:
@@ -117,6 +132,11 @@ class VFLProtocol:
         self.role = role
         self.data: Any = None          # MasterData / MemberData / None
         self.order: Optional[List[str]] = None
+        # True while running under a checkpoint restore: setup() hooks
+        # must skip comm-based exchanges whose counterpart ran (or is
+        # mid-fit) in another epoch of the federation — e.g. a rejoining
+        # member recovers setup-time scalars from the checkpoint instead
+        self.resuming: bool = False
 
     @property
     def is_master(self) -> bool:
@@ -284,9 +304,18 @@ class Checkpointer(Callback):
     consistent cut of the whole federation. Resume via
     ``VFLJob(..., resume_dir=...)``."""
 
-    def __init__(self, directory, every_steps: int = 1):
+    def __init__(self, directory, every_steps: int = 1,
+                 save_on_start: bool = False):
         self.directory = str(directory)
         self.every_steps = every_steps
+        # elastic clusters set this so a checkpoint exists from step 0:
+        # a member crashing before its first on_batch_end still has
+        # state (and the matched order) to rejoin from
+        self.save_on_start = save_on_start
+
+    def on_fit_start(self, driver):
+        if self.save_on_start:
+            driver.save_checkpoint(self.directory)
 
     def on_batch_end(self, driver, step, epoch, loss):
         if (step + 1) % self.every_steps == 0:
@@ -336,7 +365,8 @@ class Driver:
 
     def __init__(self, proto: VFLProtocol,
                  callbacks: Sequence[Callback] = (),
-                 resume_state: Optional[Dict[str, Any]] = None):
+                 resume_state: Optional[Dict[str, Any]] = None,
+                 elastic: Optional[ElasticCfg] = None):
         self.proto = proto
         self.cfg = proto.cfg
         self.ch = proto.ch
@@ -351,6 +381,10 @@ class Driver:
         self._stop: Optional[str] = None
         self._resume = resume_state
         self._pos = (0, 0)            # (epoch, next batch index)
+        self.elastic = elastic        # master-side; None = fail-fast
+        # one dict per recovered peer: role, master step at rejoin, the
+        # peer's restored step, and how long the rejoin handshake took
+        self.recoveries: List[Dict[str, Any]] = []
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -374,16 +408,32 @@ class Driver:
         d.mkdir(parents=True, exist_ok=True)
         state = {"global_step": self.global_step, "pos": self._pos,
                  "history": list(self.history),
+                 # the agreed sample order: lets a restarted agent skip
+                 # the comm-driven match phase entirely on resume
+                 "order": list(self.proto.order)
+                 if self.proto.order is not None else None,
                  "proto": self.proto.state_dict()}
-        (d / f"{self.role}.pkl").write_bytes(pickle.dumps(state))
+        # atomic tmp+rename: a SIGKILL mid-write must never leave a
+        # truncated pickle for the restarted process to trip over
+        tmp = d / f".{self.role}.pkl.tmp"
+        tmp.write_bytes(pickle.dumps(state))
+        os.replace(tmp, d / f"{self.role}.pkl")
 
     # -- lifecycle entry -----------------------------------------------------
     def prepare(self, data) -> None:
         """match + setup (+ checkpoint restore). Runs once per agent."""
         self.proto.data = data
+        self.proto.resuming = self._resume is not None
         t0 = time.perf_counter()
         self.ch.stats.phase = "match"
-        self.proto.order = self.proto.match()
+        if self._resume is not None and \
+                self._resume.get("order") is not None:
+            # the checkpoint carries the agreed order — a restarted
+            # agent must NOT rerun the comm-based match phase (its
+            # peers are mid-fit, not waiting in match)
+            self.proto.order = list(self._resume["order"])
+        else:
+            self.proto.order = self.proto.match()
         self._timed("match", t0)
         self.n = len(self.proto.order) if self.proto.order is not None \
             else 0
@@ -407,6 +457,8 @@ class Driver:
                 out["stopped"] = self.stopped
             if self.eval_history:
                 out["eval_history"] = list(self.eval_history)
+            if self.recoveries:
+                out["recoveries"] = list(self.recoveries)
         return out
 
     # -- master side ---------------------------------------------------------
@@ -435,6 +487,14 @@ class Driver:
         depth = max(1, int(cfg.pipeline_depth)) \
             if self.proto.supports_pipeline else 1
         self.ch.stats.phase = "fit"
+        # arm the channel's elastic / straggler machinery for the fit
+        # phase only: crashes outside fit (match, predict) stay
+        # fail-fast, and the per-round deadline is meaningful only when
+        # the pipeline gives members slack to be stale in
+        if self.elastic is not None:
+            self.ch.elastic_roles = set(self.elastic.roles)
+        if depth > 1 and cfg.round_deadline_s > 0:
+            self.ch.round_deadline = float(cfg.round_deadline_s)
         self.ch.broadcast("ctrl/phase", {"op": np.array([PHASE_FIT], np.int64)},
                           targets=self._others)
         self._stop = None
@@ -454,7 +514,11 @@ class Driver:
         exhausted = False
         cached_epoch, perm = None, None
         while True:
-            while not self._stop and not exhausted \
+            # a down peer pauses NEW announcements; the already-announced
+            # window still completes below (stale substitution keeps the
+            # survivors' streams in lock-step), then the rejoin handshake
+            # runs with no round in flight
+            while not self._stop and not exhausted and not self.ch.down \
                     and len(announced) < depth:
                 try:
                     epoch, b, (lo, hi) = next(sched)
@@ -475,6 +539,9 @@ class Driver:
                                   wait=(depth == 1))
                 announced.append((epoch, b, lo, hi))
             if not announced:
+                if self.ch.down and self.elastic is not None:
+                    self._elastic_rejoin()
+                    continue
                 break
             epoch, b, lo, hi = announced.popleft()
             if epoch != cached_epoch:
@@ -496,14 +563,55 @@ class Driver:
             if b == last_b and not self._stop:
                 self._pos = (epoch + 1, 0)
                 self._invoke("on_epoch_end", epoch)
+        self.ch.round_deadline = None     # disarm: predict waits fully
+        self.ch._drain_stale()            # consume late straggler msgs
         self.ch.broadcast("ctrl/step", _step_payload(OP_END, -1, 0, 0),
                           targets=self._others)
         self.stopped = self._stop
         self._invoke("on_fit_end")
         self._timed("fit", t0)
-        return {"history": list(self.history), "n_common": self.n,
-                "stopped": self.stopped,
-                "eval_history": list(self.eval_history)}
+        out = {"history": list(self.history), "n_common": self.n,
+               "stopped": self.stopped,
+               "eval_history": list(self.eval_history)}
+        if self.recoveries:
+            out["recoveries"] = list(self.recoveries)
+        return out
+
+    def _elastic_rejoin(self) -> None:
+        """The in-flight window is drained and at least one elastic peer
+        is down: for each, reset every per-peer comm/channel counter
+        (the restarted process counts from zero on both planes), wait
+        for its ``ctrl/rejoin`` hello, ack with the master's global
+        step, and resume announcing. Survivors never notice — their
+        streams were kept in lock-step by stale substitution, so no
+        counter of theirs is touched."""
+        assert self.role == "master" and self.elastic is not None
+        for dead in sorted(self.ch.down):
+            t0 = time.perf_counter()
+            # full reset BEFORE listening: sequence numbers, reorder
+            # buffers, EF residuals, the cached connection and the
+            # sticky send error all return to zero so both ends of the
+            # new connection agree on a fresh stream. The hello may
+            # already be pending — keep control-plane tags.
+            self.ch.reset_peer(dead)
+            self.ch.comm.reset_peer(dead, keep_tags=("ctrl/",))
+            try:
+                hello = self.ch.recv(dead, "ctrl/rejoin",
+                                     timeout=self.elastic.wait_s)
+            except (TimeoutError, ConnectionError) as e:
+                raise ConnectionError(
+                    f"master: peer {dead!r} dropped mid-fit and sent "
+                    f"no rejoin hello within {self.elastic.wait_s}s"
+                ) from e
+            peer_step = int(hello.tensor("step")[0])
+            self.ch.down.discard(dead)
+            self.ch.send(dead, "ctrl/rejoin",
+                         {"step": np.array([self.global_step],
+                                           np.int64)})
+            self.recoveries.append({
+                "role": dead, "step": self.global_step,
+                "peer_step": peer_step,
+                "wait_s": round(time.perf_counter() - t0, 4)})
 
     def predict(self, rows: Optional[np.ndarray] = None,
                 batch_size: Optional[int] = None) -> np.ndarray:
@@ -592,6 +700,30 @@ class Driver:
             else:
                 raise ValueError(f"{self.role}: unknown phase op {op}")
         return self.result()
+
+    def rejoin_follow(self, idle_timeout: float = 3600.0
+                      ) -> Dict[str, Any]:
+        """Member entry point after a restart: state is already restored
+        from the checkpoint (``prepare`` skipped match via the stored
+        order), the master is paused mid-fit waiting for us. Send the
+        rejoin hello, take the master's global step from the ack, and
+        drop straight into the fit round loop — there is no pending
+        ``ctrl/phase`` announcement to wait for. After fit ends, hand
+        over to the normal :meth:`follow` loop for predict/shutdown."""
+        assert self.role != "master"
+        hello = {"step": np.array([self.global_step], np.int64)}
+        self.ch.send("master", "ctrl/rejoin", hello)
+        ack = self.ch.recv("master", "ctrl/rejoin",
+                           timeout=self.ch.comm._timeout)
+        self.global_step = max(self.global_step,
+                               int(ack.tensor("step")[0]))
+        t0 = time.perf_counter()
+        self.ch.stats.phase = "fit"
+        self._invoke("on_fit_start")
+        self._follow_steps()
+        self._invoke("on_fit_end")
+        self._timed("fit", t0)
+        return self.follow(idle_timeout)
 
     def _follow_steps(self) -> None:
         """Reactive round loop. Synchronous members execute each RUN

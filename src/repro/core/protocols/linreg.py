@@ -36,18 +36,24 @@ class LinRegProtocol(VFLProtocol):
 
     def setup(self) -> None:
         ch, d = self.ch, self.data
+        # the width exchange only runs on a fresh federation: a resumed
+        # (e.g. rejoining) agent restores items/w from its checkpoint —
+        # its counterpart is mid-fit, not waiting in setup
         if self.is_master:
             self.y = base._select(d.ids, self.order, d.y).astype(np.float64)
             self.x = base._select(d.ids, self.order, d.x).astype(np.float64) \
                 if d.x is not None else None
             self.items = self.y.shape[1]
-            ch.broadcast("linreg/setup",
-                         {"items": np.array([self.items], np.int64)},
-                         targets=ch.members)
+            if not self.resuming:
+                ch.broadcast("linreg/setup",
+                             {"items": np.array([self.items], np.int64)},
+                             targets=ch.members)
             self.w = np.zeros((self.x.shape[1], self.items)) \
                 if self.x is not None else None
         else:
             self.x = base._select(d.ids, self.order, d.x).astype(np.float64)
+            if self.resuming:
+                return          # items/w arrive via load_state_dict
             self.items = int(ch.recv("master",
                                      "linreg/setup").tensor("items")[0])
             self.w = np.zeros((self.x.shape[1], self.items))
@@ -58,7 +64,9 @@ class LinRegProtocol(VFLProtocol):
         if self.x is not None:
             zb += self.x[rows] @ self.w
         for msg in ch.gather(ch.members, "linreg/z"):
-            zb += msg.tensor("z")
+            # stale substitutions (down/straggling peer) may carry a
+            # different tail-batch row count than this round
+            zb += base.fit_rows(msg.tensor("z"), len(rows))
         r = (zb - self.y[rows]) / len(rows)
         # async broadcast: the residual is snapshotted at encode time,
         # so the in-place weight update below can't race the wire write
@@ -101,3 +109,5 @@ class LinRegProtocol(VFLProtocol):
 
     def load_state_dict(self, state) -> None:
         self.w = None if state["w"] is None else state["w"].copy()
+        if self.w is not None:
+            self.items = self.w.shape[1]

@@ -148,8 +148,11 @@ class SplitNNProtocol(VFLProtocol):
     def on_batch_master(self, rows, step) -> float:
         ch = self.ch
         msgs = ch.gather(ch.members, "splitnn/u")
-        u_members = tuple(jnp.asarray(m.tensor("u"), jnp.float32)
-                          for m in msgs)
+        # fit_rows: a stale substitution (down/straggling peer) may
+        # carry a different tail-batch row count than this round
+        u_members = tuple(
+            jnp.asarray(base.fit_rows(m.tensor("u"), len(rows)),
+                        jnp.float32) for m in msgs)
         loss, self.top, self.bottom, g_u = _master_fwd_bwd(
             self.top, self.bottom, u_members, self.x[rows], self.y[rows],
             self.lr)

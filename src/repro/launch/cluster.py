@@ -54,7 +54,7 @@ import numpy as np
 from repro.comm.base import CommCfg, LinkSpec, TLSSpec
 from repro.comm.grpc import GrpcCommunicator
 from repro.comm.sock import SocketCommunicator
-from repro.core.protocols.driver import Callback
+from repro.core.protocols.driver import Callback, Checkpointer, ElasticCfg
 
 # ---------------------------------------------------------------------------
 # minimal TOML (Python 3.10 has no tomllib; the subset below covers
@@ -176,6 +176,51 @@ class HostSpec:
 
 
 @dataclass
+class RestartPolicy:
+    """Per-role supervision policy from the spec's ``[restart]`` table.
+
+    ``policy="never"`` (default) keeps PR 5's fail-fast: any crash
+    aborts every launcher. ``policy="on_failure"`` makes the owning
+    launcher respawn the agent up to ``max_restarts`` times with
+    exponential backoff (``backoff_s * 2^attempt``, capped at
+    ``backoff_max_s``); the restarted agent resumes from its local
+    checkpoint (written every ``checkpoint_every`` rounds) and rejoins
+    the paused master, which waits up to ``wait_s`` for the rejoin
+    hello. Only members may be restartable — crashes of the master or
+    arbiter, and any crash before rendezvous or outside the fit phase,
+    stay fail-fast. See docs/deploy.md.
+    """
+
+    policy: str = "never"              # "never" | "on_failure"
+    max_restarts: int = 3
+    backoff_s: float = 0.5
+    backoff_max_s: float = 10.0
+    wait_s: float = 60.0               # master-side rejoin wait
+    checkpoint_every: int = 1
+
+
+@dataclass
+class ChaosSpec:
+    """Fault injection from the spec's ``[chaos]`` table: at global
+    step ``step`` on agent ``role``, run ``scenario`` —
+
+    * ``"crash"`` — raise inside the driver loop (the process dies;
+      pair with ``[restart]`` to exercise the rejoin path),
+    * ``"partition"`` — blackhole the agent's outbound link
+      (``LinkSpec(loss=loss)``, default drop-everything),
+    * ``"slow"`` — inflate the agent's outbound latency to
+      ``latency_ms`` mid-run (the straggler scenario; pair with
+      ``round_deadline_s`` at depth >= 2 to see stale substitution).
+    """
+
+    role: str
+    step: int
+    scenario: str = "crash"            # "crash" | "partition" | "slow"
+    latency_ms: float = 250.0          # "slow" link latency
+    loss: float = 1.0                  # "partition" drop probability
+
+
+@dataclass
 class ClusterSpec:
     """Parsed cluster spec — everything a launcher (or
     :meth:`~repro.core.party.VFLJob.from_spec`) needs to run the
@@ -204,7 +249,10 @@ class ClusterSpec:
     data_kwargs: Dict[str, Any] = field(default_factory=dict)
     barrier_timeout: float = 60.0
     control_tls: bool = True
-    chaos: Optional[Tuple[str, int]] = None   # (role, crash-at-step)
+    chaos: Optional[ChaosSpec] = None
+    # per-role restart policies; "*" is the member-wide default set by
+    # flat [restart] keys, explicit [restart.<role>] entries override
+    restart: Dict[str, RestartPolicy] = field(default_factory=dict)
 
     # -- structure -----------------------------------------------------------
     @property
@@ -220,6 +268,19 @@ class ClusterSpec:
             raise KeyError(f"host {host!r} not in spec "
                            f"(hosts: {sorted(self.hosts)})")
         return list(self.hosts[host].agents)
+
+    def restart_of(self, role: str) -> RestartPolicy:
+        """Effective restart policy for ``role``: its explicit
+        ``[restart.<role>]`` entry, else the member-wide flat
+        ``[restart]`` default (members only), else fail-fast."""
+        rp = self.restart.get(role)
+        if rp is None and role.startswith("member"):
+            rp = self.restart.get("*")
+        return rp if rp is not None else RestartPolicy()
+
+    def restartable_roles(self) -> List[str]:
+        return [r for r in sorted(self.agents)
+                if self.restart_of(r).policy == "on_failure"]
 
     def validate(self) -> None:
         expected = set(self.world())
@@ -245,9 +306,35 @@ class ClusterSpec:
         for phase in self.run_phases:
             if phase not in ("fit", "evaluate", "predict"):
                 raise ValueError(f"[run] unknown phase {phase!r}")
-        if self.chaos is not None and self.chaos[0] not in have:
-            raise ValueError(f"[chaos] role {self.chaos[0]!r} is not "
-                             f"an agent")
+        if self.chaos is not None:
+            if self.chaos.role not in have:
+                raise ValueError(f"[chaos] role {self.chaos.role!r} is "
+                                 f"not an agent")
+            if self.chaos.scenario not in ("crash", "partition", "slow"):
+                raise ValueError(
+                    f"[chaos] unknown scenario {self.chaos.scenario!r} "
+                    f"(valid: crash, partition, slow)")
+        for key, rp in self.restart.items():
+            if rp.policy not in ("never", "on_failure"):
+                raise ValueError(f"[restart] unknown policy "
+                                 f"{rp.policy!r} for {key!r} "
+                                 f"(valid: never, on_failure)")
+            if key != "*" and key not in have:
+                raise ValueError(f"[restart] role {key!r} is not an "
+                                 f"agent")
+        restartable = self.restartable_roles()
+        bad = [r for r in restartable if not r.startswith("member")]
+        if bad:
+            raise ValueError(
+                f"[restart] only members may use policy='on_failure' "
+                f"(got {bad}); the master coordinates the rejoin and "
+                f"cannot itself be elastic")
+        if restartable and (self.cfg.secure_agg
+                            or self.cfg.protocol == "secure_agg"):
+            raise ValueError(
+                "[restart] elastic members are unsupported with secure "
+                "aggregation: a restarted member's pairwise masks "
+                "desync from the survivors'")
 
     # -- construction --------------------------------------------------------
     def make_communicator(self, role: str):
@@ -255,7 +342,14 @@ class ClusterSpec:
         address map and the spec's :class:`CommCfg` (TLS included)."""
         cls = SocketCommunicator if self.framing == "sock" \
             else GrpcCommunicator
-        return cls(role, dict(self.agents), comm_cfg=self.comm)
+        comm = self.comm
+        if self.restartable_roles():
+            # elastic clusters need drop attribution even for clean
+            # EOFs: a SIGKILL'd agent's kernel closes its sockets
+            # tidily, and the master must notice within milliseconds
+            from dataclasses import replace
+            comm = replace(comm, strict_eof=True)
+        return cls(role, dict(self.agents), comm_cfg=comm)
 
     def control_comm(self, host: str) -> SocketCommunicator:
         """The launcher↔launcher control channel: a tiny sock-framed
@@ -353,8 +447,35 @@ def _spec_from_dict(raw: Dict[str, Any],
     provider = data.pop("provider",
                         "repro.launch.cluster:quickstart_data")
     chaos_raw = raw.get("chaos")
-    chaos = (chaos_raw["role"], int(chaos_raw["step"])) \
-        if chaos_raw else None
+    chaos = None
+    if chaos_raw:
+        ckeys = {f.name for f in fields(ChaosSpec)}
+        unknown = set(chaos_raw) - ckeys
+        if unknown:
+            raise ValueError(f"[chaos] unknown keys {sorted(unknown)} "
+                             f"(valid: {sorted(ckeys)})")
+        chaos = ChaosSpec(**{**chaos_raw, "step": int(chaos_raw["step"])})
+
+    restart_raw = dict(raw.get("restart") or {})
+    rkeys = {f.name for f in fields(RestartPolicy)}
+
+    def _policy(d: Dict[str, Any], where: str) -> RestartPolicy:
+        unknown = set(d) - rkeys
+        if unknown:
+            raise ValueError(f"[restart{where}] unknown keys "
+                             f"{sorted(unknown)} (valid: "
+                             f"{sorted(rkeys)})")
+        return RestartPolicy(**d)
+
+    per_role = {k: v for k, v in restart_raw.items()
+                if isinstance(v, dict)}
+    flat = {k: v for k, v in restart_raw.items()
+            if not isinstance(v, dict)}
+    restart: Dict[str, RestartPolicy] = {}
+    if flat:
+        restart["*"] = _policy(flat, "")
+    for role, d in per_role.items():
+        restart[role] = _policy({**flat, **d}, f".{role}")
 
     return ClusterSpec(
         cfg=cfg, agents=agents, hosts=hosts, comm=CommCfg(**ckw),
@@ -362,7 +483,7 @@ def _spec_from_dict(raw: Dict[str, Any],
         run_phases=list(run.get("phases", ["fit"])),
         data_provider=provider, data_kwargs=data,
         barrier_timeout=float(barrier), control_tls=bool(control_tls),
-        chaos=chaos)
+        chaos=chaos, restart=restart)
 
 
 # ---------------------------------------------------------------------------
@@ -446,11 +567,45 @@ class _ChaosCrash(Callback):
                 f"chaos: injected crash at step {step}")
 
 
+class _ChaosLink(Callback):
+    """Driver callback that swaps the agent's outbound link spec once
+    at a given step — the ``partition`` (blackhole) and ``slow``
+    (latency-inflation) chaos scenarios."""
+
+    def __init__(self, step: int, link: LinkSpec):
+        self.step = step
+        self.link = link
+        self._fired = False
+
+    def on_batch_end(self, driver, step, epoch, loss) -> None:
+        if not self._fired and step >= self.step:
+            self._fired = True
+            print(f"chaos: link -> {self.link} at step {step}",
+                  flush=True)
+            driver.ch.comm.set_link(self.link)
+
+
+def _chaos_callbacks(spec: ClusterSpec, role: str) -> List[Callback]:
+    ch = spec.chaos
+    if ch is None or ch.role != role:
+        return []
+    if ch.scenario == "crash":
+        return [_ChaosCrash(ch.step)]
+    if ch.scenario == "partition":
+        return [_ChaosLink(ch.step, LinkSpec(loss=ch.loss))]
+    if ch.scenario == "slow":
+        return [_ChaosLink(ch.step, LinkSpec(latency_ms=ch.latency_ms))]
+    raise ValueError(f"unknown chaos scenario {ch.scenario!r}")
+
+
 def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
-                        status_q) -> None:
+                        status_q, rejoin: bool = False) -> None:
     """Entry point of one spawned agent process (module-level for
     spawn picklability). Reports ("ready"|"ok"|"error", role, info) on
-    ``status_q``; stdout/stderr land in ``log_path``."""
+    ``status_q``; stdout/stderr land in ``log_path``. ``rejoin=True``
+    marks a supervisor respawn: the agent restores state from its
+    checkpoint directory and enters the master's paused fit via the
+    rejoin handshake."""
     lf = open(log_path, "ab", buffering=0)
     os.dup2(lf.fileno(), 1)
     os.dup2(lf.fileno(), 2)
@@ -462,10 +617,33 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
         comm = spec.make_communicator(role)
         status_q.put(("ready", role, os.getpid()))
         data = spec.build_data(role)
-        callbacks = [_ChaosCrash(spec.chaos[1])] \
-            if spec.chaos and spec.chaos[0] == role else []
+        # a chaos fault is injected ONCE — the supervisor's respawn of
+        # the victim must not re-arm it (it would crash again instantly
+        # and burn the whole restart budget on one scripted fault)
+        callbacks = [] if rejoin else _chaos_callbacks(spec, role)
+        restartable = spec.restartable_roles()
+        elastic = None
+        resume_dir = None
+        if restartable and role == "master":
+            elastic = ElasticCfg(
+                roles=frozenset(restartable),
+                wait_s=max(spec.restart_of(r).wait_s
+                           for r in restartable))
+        elif role in restartable:
+            # the agent's checkpoint directory sits beside its log;
+            # save_on_start guarantees a rejoinable cut exists from
+            # step 0. Only a supervisor respawn resumes from it — a
+            # fresh run ignores (and then overwrites) leftovers.
+            rp = spec.restart_of(role)
+            ckpt = str(pathlib.Path(log_path).parent / "ckpt")
+            callbacks.append(Checkpointer(
+                ckpt, every_steps=rp.checkpoint_every,
+                save_on_start=True))
+            if rejoin:
+                resume_dir = ckpt
         if role == "master":
-            agent = PartyMaster(comm, spec.cfg, callbacks=callbacks)
+            agent = PartyMaster(comm, spec.cfg, callbacks=callbacks,
+                                elastic=elastic)
             summary: Dict[str, Any] = {}
             for phase in spec.run_phases:
                 print(f"[{role}] phase {phase}", flush=True)
@@ -477,6 +655,9 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
                         "first_loss": h[0]["loss"] if h else None,
                         "final_loss": h[-1]["loss"] if h else None,
                         "wall_s": h[-1]["wall_s"] if h else None}
+                    if r.get("recoveries"):
+                        summary["recoveries"] = _json_safe(
+                            r["recoveries"])
                 elif phase == "evaluate":
                     summary["evaluate"] = _json_safe(agent.evaluate())
                 elif phase == "predict":
@@ -486,11 +667,12 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
             summary["comm"] = _json_safe(res.get("comm"))
             status_q.put(("ok", role, summary))
         else:
-            agent = PartyMember(comm, spec.cfg, callbacks=callbacks) \
+            agent = PartyMember(comm, spec.cfg, callbacks=callbacks,
+                                resume_dir=resume_dir) \
                 if role.startswith("member") \
                 else Arbiter(comm, spec.cfg, callbacks=callbacks)
-            res = agent.serve(data) if role.startswith("member") \
-                else agent.serve()
+            res = agent.serve(data, rejoin=rejoin) \
+                if role.startswith("member") else agent.serve()
             status_q.put(("ok", role,
                           {"comm": _json_safe(res.get("comm"))}))
     except BaseException:
@@ -547,6 +729,12 @@ class ClusterLauncher:
         self._exit_seen: Dict[str, float] = {}
         self._ctl: Optional[SocketCommunicator] = None
         self._fail_futs: Dict[str, Any] = {}
+        # elastic supervision: restart attempts per role and scheduled
+        # respawn times (monotonic)
+        self._restarts: Dict[str, int] = {}
+        self._pending_restart: Dict[str, float] = {}
+        self._pids: Dict[str, int] = {}
+        self._ctx = None
 
     def request_stop(self) -> None:
         """Ask ``run()`` to terminate local agents and exit 143 (wired
@@ -604,23 +792,92 @@ class ClusterLauncher:
                            msg.meta.get("traceback", "(no traceback)"),
                            remote=True)
 
+    def _maybe_restart(self, role: str, why: str) -> bool:
+        """Death/error handling for a restartable role: schedule a
+        backed-off respawn and return True, or return False when the
+        policy (or the remaining budget, or the phase) says fail-fast."""
+        if role in self._pending_restart:
+            return True                   # already scheduled (a death
+        #                                   and its error msg both land)
+        rp = self.spec.restart_of(role)
+        # the policy only arms once the agent has reported ready (its
+        # listener bound, data plane up): crashes before that are
+        # deploy problems — bad spec, bad certs, import errors — that a
+        # respawn would only repeat. The agent's own fit may begin (and
+        # a chaos fault may fire) before the LAUNCHERS' control barrier
+        # completes, so readiness, not the cross-host barrier, is the
+        # arming point.
+        if rp.policy != "on_failure" or role not in self._pids:
+            return False
+        n = self._restarts.get(role, 0)
+        if n >= rp.max_restarts:
+            self._log(f"agent {role} exhausted its restart budget "
+                      f"({rp.max_restarts})")
+            return False
+        self._restarts[role] = n + 1
+        backoff = min(rp.backoff_s * (2 ** n), rp.backoff_max_s)
+        self._log(f"agent {role} died ({why}); restart "
+                  f"{n + 1}/{rp.max_restarts} in {backoff:.1f}s")
+        self._pending_restart[role] = time.monotonic() + backoff
+        if self._ctl is not None:
+            # informational only — peer supervision loops ignore it,
+            # but it lands in their logs for cross-host debugging
+            try:
+                self._ctl.broadcast("ctl/rejoin", {"ok": np.ones(1)},
+                                    meta={"role": role}, wait=False)
+            except (OSError, RuntimeError):
+                pass
+        return True
+
+    def _forget_proc(self, role: str) -> None:
+        p = self._procs.pop(role, None)
+        if p is not None and p.is_alive():
+            p.join(timeout=5.0)
+        self._exit_seen.pop(role, None)
+
+    def _spawn(self, role: str, rejoin: bool = False) -> None:
+        p = self._ctx.Process(
+            target=_cluster_agent_main,
+            args=(self.spec, role, str(self.log_dir / f"{role}.log"),
+                  self._status_q, rejoin))
+        p.daemon = True
+        self._procs[role] = p
+        p.start()
+
+    def _respawn_due(self) -> None:
+        now = time.monotonic()
+        for role, due in list(self._pending_restart.items()):
+            if now >= due:
+                del self._pending_restart[role]
+                self._log(f"respawning agent {role} (rejoin)")
+                self._spawn(role, rejoin=True)
+
     def _drain_status(self, ready: Optional[set] = None) -> None:
         while True:
             try:
                 kind, role, info = self._status_q.get_nowait()
             except queue.Empty:
                 return
-            if kind == "ready" and ready is not None:
-                ready.add(role)
+            if kind == "ready":
                 self._pids[role] = info
+                if ready is not None:
+                    ready.add(role)
+                else:
+                    # a respawned agent re-bound its listener: refresh
+                    # pids.json so tooling kills the right process
+                    (self.log_dir / "pids.json").write_text(
+                        json.dumps(self._pids))
             elif kind == "ok":
                 self._ok[role] = info
                 self._log(f"agent {role} finished ok")
             elif kind == "error":
-                self._fail(role, info)
+                if self._maybe_restart(role, "reported an error"):
+                    self._forget_proc(role)
+                else:
+                    self._fail(role, info)
 
     def _check_deaths(self) -> None:
-        for role, p in self._procs.items():
+        for role, p in list(self._procs.items()):
             if role in self._ok or p.exitcode is None:
                 continue
             code = p.exitcode
@@ -641,6 +898,9 @@ class ClusterLauncher:
                     if code < 0 else f"exit code {code}"
             except ValueError:
                 why = f"exit code {code}"
+            if self._maybe_restart(role, why):
+                self._forget_proc(role)
+                continue
             self._fail(role, f"agent process {role!r} died with "
                              f"{why} before reporting a result "
                              f"(no traceback available)")
@@ -656,6 +916,7 @@ class ClusterLauncher:
         self._drain_status(ready)
         self._check_deaths()
         self._check_peers()
+        self._respawn_due()
         time.sleep(self.POLL_S)
 
     # -- main ----------------------------------------------------------------
@@ -676,6 +937,7 @@ class ClusterLauncher:
         self.log_dir.mkdir(parents=True, exist_ok=True)
         self._pids: Dict[str, int] = {}
         ctx = mp.get_context("spawn")
+        self._ctx = ctx
         self._status_q = ctx.Queue()
 
         # control channel first, so peers can rendezvous with us while
@@ -689,13 +951,7 @@ class ClusterLauncher:
 
         self._log(f"spawning {self.roles} (logs in {self.log_dir})")
         for role in self.roles:
-            p = ctx.Process(
-                target=_cluster_agent_main,
-                args=(spec, role, str(self.log_dir / f"{role}.log"),
-                      self._status_q))
-            p.daemon = True
-            self._procs[role] = p
-            p.start()
+            self._spawn(role)
 
         # local readiness: every agent constructed its communicator
         # (listener bound) — then join the cross-host barrier
@@ -711,16 +967,32 @@ class ClusterLauncher:
         (self.log_dir / "pids.json").write_text(json.dumps(self._pids))
 
         if self.peers:
+            # non-blocking: a blocking broadcast could wedge for the
+            # full comm timeout retrying a peer that just died, while
+            # that peer's ctl/fail sits completed in _fail_futs — the
+            # supervision loop below must keep polling it so crash
+            # propagation preempts a stuck rendezvous send
             try:
-                self._ctl.broadcast("ctl/ready", {"ok": np.ones(1)},
-                                    meta={"host": self.host})
-            except (OSError, TimeoutError) as e:
+                ready_sends = list(self._ctl.broadcast(
+                    "ctl/ready", {"ok": np.ones(1)},
+                    meta={"host": self.host}, wait=False))
+            except (OSError, RuntimeError) as e:
                 self._log(f"rendezvous failed: {e}")
                 self._terminate_local()
                 return 3
             waiting = set(self.peers)
             while waiting:
                 self._tick()
+                for f in list(ready_sends):
+                    if not f.done():
+                        continue
+                    try:
+                        f.result(0)
+                    except (OSError, TimeoutError) as e:
+                        self._log(f"rendezvous failed: {e}")
+                        self._terminate_local()
+                        return 3
+                    ready_sends.remove(f)
                 waiting = {p for p in waiting
                            if not ready_futs[p].done()}
                 if time.monotonic() > deadline:

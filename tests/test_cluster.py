@@ -233,3 +233,78 @@ def test_sigkilled_member_detected_within_seconds(tmp_path):
         "launchers hung after SIGKILL"
     assert time.monotonic() - t0 < 30.0
     assert codes == {"alpha": 1, "beta": 1}
+
+
+# ---------------------------------------------------------------------------
+# [restart] supervision: spec validation + rejoin end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_restart_spec_validation():
+    # flat keys are the member-wide default, per-role entries override
+    spec = load_spec(_linreg_spec(
+        _free_ports(5),
+        restart={"policy": "on_failure", "backoff_s": 0.1,
+                 "member1": {"max_restarts": 7}}))
+    spec.validate()
+    assert spec.restartable_roles() == ["member0", "member1"]
+    assert spec.restart_of("member0").max_restarts == 3
+    assert spec.restart_of("member1").max_restarts == 7
+    assert spec.restart_of("member1").backoff_s == 0.1  # flat inherited
+    assert spec.restart_of("master").policy == "never"  # never implied
+
+    with pytest.raises(ValueError, match="only members"):
+        load_spec(_linreg_spec(
+            _free_ports(5),
+            restart={"master": {"policy": "on_failure"}})).validate()
+    with pytest.raises(ValueError, match="unknown policy"):
+        load_spec(_linreg_spec(
+            _free_ports(5), restart={"policy": "always"})).validate()
+    with pytest.raises(ValueError, match="unknown keys"):
+        load_spec(_linreg_spec(_free_ports(5),
+                               restart={"retries": 3}))
+    with pytest.raises(ValueError, match="secure ag"):
+        bad = load_spec(_linreg_spec(
+            _free_ports(5), restart={"policy": "on_failure"}))
+        bad.cfg.secure_agg = True
+        bad.validate()
+    with pytest.raises(ValueError, match="not an agent"):
+        load_spec(_linreg_spec(
+            _free_ports(5),
+            restart={"member9": {"policy": "on_failure"}})).validate()
+
+
+def test_restart_never_is_the_default():
+    """An unadorned spec must keep PR 5 fail-fast semantics: no role is
+    restartable and strict_eof stays off the communicators."""
+    spec = load_spec(_linreg_spec(_free_ports(5)))
+    assert spec.restartable_roles() == []
+    assert spec.restart_of("member0").policy == "never"
+
+
+def test_restart_policy_rejoins_and_completes(tmp_path):
+    """The full supervision loop: the chaos crash kills member1 on host
+    beta mid-fit; its launcher respawns it (rejoin entry, resume from
+    the role-local checkpoint), the master pauses, accepts the rejoin
+    hello, and training completes EVERY announced round. Both launchers
+    exit 0 and the summary records the recovery."""
+    spec = load_spec(_linreg_spec(
+        _free_ports(5), epochs=6,
+        chaos={"role": "member1", "step": 5},
+        restart={"member1": {"policy": "on_failure",
+                             "backoff_s": 0.2, "backoff_max_s": 1.0}}))
+    t0 = time.monotonic()
+    codes = _run_pair(spec, tmp_path)
+    dt = time.monotonic() - t0
+    assert codes == {"alpha": 0, "beta": 0}
+    summary = json.loads(
+        (tmp_path / "alpha" / "summary.json").read_text())
+    master = summary["agents"]["master"]
+    assert master["fit"]["steps"] == 24          # 6 epochs x 4 batches
+    assert master["fit"]["final_loss"] < master["fit"]["first_loss"]
+    rec = master["recoveries"]
+    assert [r["role"] for r in rec] == ["member1"]
+    assert rec[0]["wait_s"] < 15.0               # recovery, not timeout
+    assert dt < 120.0
+    # the respawned agent reported ready again: pids.json was rewritten
+    assert (tmp_path / "beta" / "pids.json").exists()

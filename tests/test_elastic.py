@@ -1,0 +1,400 @@
+"""Elastic clusters (docs/deploy.md): connect backoff with a named
+deadline error, link loss / blackhole shaping, strict-EOF drop
+attribution, straggler tolerance via stale substitution at depth >= 2,
+per-peer channel reset, and the full crash -> restart -> rejoin
+handshake run in-process over real sockets."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm import schema
+from repro.comm.base import CommCfg, LinkSpec
+from repro.comm.local import ThreadBus
+from repro.comm.schema import Field, TypedChannel
+from repro.comm.sock import SocketCommunicator, local_addresses
+from repro.core.party import PartyMaster, PartyMember, run_vfl
+from repro.core.protocols.base import VFLConfig
+from repro.core.protocols.driver import (Callback, Checkpointer,
+                                         ElasticCfg)
+from repro.data.vertical import vertical_partition
+
+schema.message("el/z", {"z": Field("float64", 1)}, stepped=True)
+
+
+def _linreg_case(epochs=3):
+    rng = np.random.default_rng(0)
+    n, d, items = 192, 12, 2
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, items))
+    y = x @ w * 0.4 + rng.normal(scale=0.05, size=(n, items))
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[4, 3],
+                                         overlap=1.0, seed=1)
+    cfg = VFLConfig(protocol="linreg", epochs=epochs, batch_size=48,
+                    lr=0.1, seed=0, use_psi=False)
+    return cfg, master, members
+
+
+def _sock_pair(**cfg_kw):
+    addrs = local_addresses(["a", "b"])
+    ca = SocketCommunicator("a", addrs,
+                            comm_cfg=CommCfg(**cfg_kw) if cfg_kw else None)
+    cb = SocketCommunicator("b", addrs)
+    return ca, cb
+
+
+# ---------------------------------------------------------------------------
+# connect backoff
+# ---------------------------------------------------------------------------
+
+
+def test_connect_deadline_error_names_peer_and_attempts():
+    """A peer that never comes up fails the connect with an error that
+    names WHO was unreachable, WHERE, and for how long — and the
+    backed-off retry loop makes far fewer attempts than the old
+    20 Hz busy-loop would."""
+    addrs = local_addresses(["a", "b"])       # nobody listens on b
+    ca = SocketCommunicator("a", addrs, comm_cfg=CommCfg(timeout=1.2))
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="could not connect "
+                                                  "to 'b'") as ei:
+            ca.send("b", "t", {"x": np.zeros(1)})
+        dt = time.monotonic() - t0
+        assert 1.0 <= dt < 6.0, dt
+        assert "attempts" in str(ei.value)
+        # exponential backoff: 1.2s of retries fits in ~7 attempts
+        # (0.05 + 0.1 + 0.2 + ...), not the ~24 a fixed 50 ms loop makes
+        import re
+        n = int(re.search(r"\((\d+) attempts\)", str(ei.value)).group(1))
+        assert n <= 12, n
+    finally:
+        ca.close()
+
+
+# ---------------------------------------------------------------------------
+# link loss / blackhole
+# ---------------------------------------------------------------------------
+
+
+def test_link_full_loss_blackholes_and_recovers():
+    """loss=1.0 is the partition scenario: every message vanishes (the
+    sender believes its writes succeeded), the drop count is recorded,
+    and clearing the link restores delivery."""
+    ca, cb = _sock_pair(link=LinkSpec(loss=1.0))
+    try:
+        futs = [ca.isend("b", f"t{i}", {"x": np.zeros(2)})
+                for i in range(3)]
+        for f in futs:
+            f.result(5.0)                     # resolve OK: blackholed
+        ca.flush_sends(5.0)
+        assert ca.stats.link_dropped == 3
+        with pytest.raises(TimeoutError):
+            cb.recv("a", "t0", timeout=0.3)
+        ca.set_link(None)                     # partition heals
+        ca.send("b", "after", {"x": np.ones(1)})
+        assert cb.recv("a", "after", timeout=10.0).tensor("x")[0] == 1.0
+    finally:
+        ca.close(); cb.close()
+
+
+def test_link_partial_loss_preserves_fifo():
+    """Lossy links drop messages but never reorder the survivors."""
+    ca, cb = _sock_pair(link=LinkSpec(loss=0.5))
+    try:
+        n = 40
+        for i in range(n):
+            ca.isend("b", "s", {"x": np.array([float(i)])})
+        ca.flush_sends(10.0)
+        dropped = ca.stats.link_dropped
+        assert 0 < dropped < n                # deterministic seeded rng
+        got = []
+        while True:
+            try:
+                got.append(cb.recv("a", "s",
+                                   timeout=0.5).tensor("x")[0])
+            except TimeoutError:
+                break
+        assert len(got) == n - dropped
+        assert got == sorted(got)             # FIFO among survivors
+    finally:
+        ca.close(); cb.close()
+
+
+# ---------------------------------------------------------------------------
+# strict-EOF drop attribution
+# ---------------------------------------------------------------------------
+
+
+def test_strict_eof_attributes_clean_close():
+    """With strict_eof (elastic clusters), even a tidy close from an
+    identified peer — what a SIGKILL'd process's kernel produces — is a
+    drop: waiters fail fast instead of hanging out the timeout."""
+    addrs = local_addresses(["a", "b"])
+    cb = SocketCommunicator("b", addrs,
+                            comm_cfg=CommCfg(strict_eof=True,
+                                             timeout=30.0))
+    ca = SocketCommunicator("a", addrs)
+    try:
+        ca.send("b", "hello", {"x": np.zeros(1)})     # identifies a
+        cb.recv("a", "hello")
+        ca.close()                                    # clean EOF
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError, match="dropped"):
+            cb.recv("a", "never", timeout=30.0)
+        assert time.monotonic() - t0 < 5.0
+        assert "a" in cb.suspects()
+    finally:
+        cb.close()
+
+
+def test_default_eof_stays_clean_close_silent():
+    """Without strict_eof (the default), PR 5 semantics are untouched:
+    a clean close between frames is a normal boundary, not a drop."""
+    ca, cb = _sock_pair()
+    try:
+        ca.send("b", "hello", {"x": np.zeros(1)})
+        cb.recv("a", "hello")
+        ca.close()
+        time.sleep(0.3)                       # let the EOF land
+        with pytest.raises(TimeoutError):
+            cb.recv("a", "never", timeout=0.5)
+        assert "a" not in cb.suspects()
+    finally:
+        cb.close()
+
+
+# ---------------------------------------------------------------------------
+# typed-channel elastic machinery (down peers, stale gather, reset)
+# ---------------------------------------------------------------------------
+
+
+def _chan_pair():
+    bus = ThreadBus(["master", "member0"])
+    return (TypedChannel(bus.communicator("master")),
+            TypedChannel(bus.communicator("member0")))
+
+
+def test_gather_straggler_substitutes_stale_then_drains():
+    cm, c0 = _chan_pair()
+    c0.send("master", "el/z", {"z": np.array([10.0])})
+    cm.round_deadline = 0.3
+    # round 0: on time
+    [m] = cm.gather(["member0"], "el/z")
+    assert m.tensor("z")[0] == 10.0
+    # round 1: member0 straggles past the deadline — its round-0
+    # contribution is substituted and the straggle is recorded
+    [m] = cm.gather(["member0"], "el/z")
+    assert m.tensor("z")[0] == 10.0
+    assert cm.stats.straggles == {"member0": 1}
+    # the late round-1 message and round 2 both arrive: the parked
+    # future drains round 1 into the stale cache, round 2 is delivered
+    c0.send("master", "el/z", {"z": np.array([11.0])})
+    c0.send("master", "el/z", {"z": np.array([12.0])})
+    [m] = cm.gather(["member0"], "el/z")
+    assert m.tensor("z")[0] == 12.0
+    assert not cm._stale_futs                 # nothing left parked
+
+
+def test_gather_without_stale_cache_raises():
+    cm, _ = _chan_pair()
+    cm.down.add("member0")
+    with pytest.raises(ConnectionError, match="no stale"):
+        cm.gather(["member0"], "el/z")
+
+
+def test_channel_send_to_down_peer_is_dropped_without_seq_advance():
+    cm, c0 = _chan_pair()
+    cm.down.add("member0")
+    cm.send("member0", "el/z", {"z": np.zeros(1)})
+    assert cm.isend("member0", "el/z", {"z": np.zeros(1)}) is None
+    assert not cm._send_seq                   # no counter advanced
+    cm.down.clear()
+    cm.send("member0", "el/z", {"z": np.ones(1)})
+    msg = c0.recv("master", "el/z")
+    assert msg.tag == "el/z/0"                # stream starts at 0
+
+
+def test_channel_reset_peer_zeroes_counters_and_residuals():
+    from repro.core.compression import ErrorFeedback
+    cm, c0 = _chan_pair()
+    for v in (1.0, 2.0):
+        cm.send("member0", "el/z", {"z": np.array([v])})
+        c0.recv("master", "el/z")
+    cm.error_feedback = ErrorFeedback()
+    cm.error_feedback.residuals = {
+        "member0/splitnn/u/u": np.ones(2), "other/x/y": np.ones(2)}
+    cm._last_msg[("member0", "el/z")] = object()
+    cm.reset_peer("member0")
+    assert not any(k[0] == "member0" for k in cm._send_seq)
+    assert not cm._last_msg
+    assert list(cm.error_feedback.residuals) == ["other/x/y"]
+    # the stream restarts from 0 for the peer's restarted process
+    cm.send("member0", "el/z", {"z": np.array([3.0])})
+    c0_fresh = TypedChannel(c0.comm)          # fresh counters, like a
+    assert c0_fresh.recv("master", "el/z").tag == "el/z/0"   # respawn
+
+
+# ---------------------------------------------------------------------------
+# straggler tolerance end-to-end (depth >= 2 + round_deadline_s)
+# ---------------------------------------------------------------------------
+
+
+class _SleepAt(Callback):
+    """Stalls one role once at a given step — a scripted straggler."""
+
+    def __init__(self, role: str, step: int, sleep_s: float):
+        self.role = role
+        self.step = step
+        self.sleep_s = sleep_s
+
+    def on_batch_end(self, driver, step, epoch, loss):
+        if driver.role == self.role and step == self.step:
+            time.sleep(self.sleep_s)
+
+
+def test_round_deadline_tolerates_straggler():
+    """With pipeline_depth=2 and a round deadline, a member stalled for
+    many times the deadline does NOT stall the master: its stale
+    contribution is substituted, the straggle is counted, and training
+    still runs every announced round and converges."""
+    cfg, master, members = _linreg_case()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, round_deadline_s=0.3)
+    res = run_vfl(cfg, master, members, mode="thread", pipeline_depth=2,
+                  callbacks=[_SleepAt("member1", 4, 1.5)])
+    h = [r["loss"] for r in res["master"]["history"]]
+    assert len(h) == 12                       # every round computed
+    assert h[-1] < h[0]
+    straggles = res["master"]["comm"]["straggles"]
+    assert straggles.get("member1", 0) >= 1
+
+
+def test_round_deadline_off_by_default():
+    """round_deadline_s=0 (default) must leave the synchronous gather
+    untouched — bit-identical linreg traces are asserted elsewhere;
+    here: no straggle machinery ever arms."""
+    cfg, master, members = _linreg_case()
+    res = run_vfl(cfg, master, members, mode="thread", pipeline_depth=2)
+    assert res["master"]["comm"]["straggles"] == {}
+
+
+# ---------------------------------------------------------------------------
+# crash -> restart -> rejoin, in-process over real sockets
+# ---------------------------------------------------------------------------
+
+
+class _CrashAt(Callback):
+    def __init__(self, role: str, step: int):
+        self.role = role
+        self.step = step
+
+    def on_batch_end(self, driver, step, epoch, loss):
+        if driver.role == self.role and step == self.step:
+            raise RuntimeError(f"chaos: injected crash at step {step}")
+
+
+def test_member_crash_restart_rejoin_completes_fit(tmp_path):
+    """The full elastic story without the launcher: member0 crashes
+    mid-fit (its sockets close), the master pauses announcements,
+    substitutes stale contributions for the in-flight window, resets
+    member0's comm/channel state, and waits; a fresh member0 process
+    (here: thread + fresh communicator) restores from the checkpoint,
+    rejoins via the ctrl/rejoin handshake, and fit completes with every
+    round computed. Survivor member1 never notices."""
+    cfg, master_data, member_datas = _linreg_case(epochs=3)
+    world = ["master", "member0", "member1"]
+    addrs = local_addresses(world)
+    ccfg = CommCfg(strict_eof=True, timeout=30.0)
+    comms = {w: SocketCommunicator(w, addrs, comm_cfg=ccfg)
+             for w in world}
+    ckpt = tmp_path / "ckpt"
+    out = {}
+
+    def run_survivor():
+        out["member1"] = PartyMember(comms["member1"], cfg).serve(
+            member_datas[1])
+
+    def run_victim():
+        try:
+            PartyMember(comms["member0"], cfg,
+                        callbacks=[Checkpointer(ckpt, save_on_start=True),
+                                   _CrashAt("member0", 5)]
+                        ).serve(member_datas[0])
+        except RuntimeError:
+            pass
+        finally:
+            comms["member0"].close()          # the dead process's FIN
+
+    t_survivor = threading.Thread(target=run_survivor, daemon=True)
+    t_victim = threading.Thread(target=run_victim, daemon=True)
+    t_survivor.start()
+    t_victim.start()
+
+    def run_rejoin():
+        t_victim.join(60)
+        c = SocketCommunicator("member0", addrs, comm_cfg=ccfg)
+        out["member0"] = PartyMember(c, cfg, resume_dir=str(ckpt)).serve(
+            member_datas[0], rejoin=True)
+
+    t_rejoin = threading.Thread(target=run_rejoin, daemon=True)
+    t_rejoin.start()
+
+    pm = PartyMaster(comms["master"], cfg,
+                     elastic=ElasticCfg(roles=frozenset({"member0"}),
+                                        wait_s=60.0))
+    t0 = time.monotonic()
+    fit = pm.fit(master_data)
+    recovery_s = time.monotonic() - t0
+    res = pm.shutdown()
+    for t in (t_survivor, t_rejoin):
+        t.join(60)
+
+    assert [r["role"] for r in fit["recoveries"]] == ["member0"]
+    assert fit["recoveries"][0]["wait_s"] < 15.0
+    assert len(fit["history"]) == 12          # every announced round ran
+    assert fit["history"][-1]["loss"] < fit["history"][0]["loss"]
+    assert "w" in out["member0"] and "w" in out["member1"]
+    assert res["n_common"] == 192
+    assert recovery_s < 60.0
+
+
+def test_master_without_elastic_cfg_still_fails_fast(tmp_path):
+    """restart='never' semantics at the driver level: no ElasticCfg
+    means a dead member is a hard ConnectionError, exactly PR 5."""
+    cfg, master_data, member_datas = _linreg_case(epochs=3)
+    world = ["master", "member0", "member1"]
+    addrs = local_addresses(world)
+    ccfg = CommCfg(strict_eof=True, timeout=20.0)
+    comms = {w: SocketCommunicator(w, addrs, comm_cfg=ccfg)
+             for w in world}
+
+    def run_survivor():
+        try:
+            PartyMember(comms["member1"], cfg).serve(member_datas[1])
+        except (ConnectionError, TimeoutError, RuntimeError):
+            pass
+
+    def run_victim():
+        try:
+            PartyMember(comms["member0"], cfg,
+                        callbacks=[_CrashAt("member0", 3)]).serve(
+                member_datas[0])
+        except RuntimeError:
+            pass
+        finally:
+            comms["member0"].close()
+
+    ts = [threading.Thread(target=run_survivor, daemon=True),
+          threading.Thread(target=run_victim, daemon=True)]
+    for t in ts:
+        t.start()
+    pm = PartyMaster(comms["master"], cfg)    # no elastic
+    t0 = time.monotonic()
+    with pytest.raises(ConnectionError):
+        pm.fit(master_data)
+    assert time.monotonic() - t0 < 30.0
+    comms["master"].close()
+    comms["member1"].close()

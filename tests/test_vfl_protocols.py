@@ -171,3 +171,34 @@ def test_secure_agg_masks_cancel_and_hide():
     m1 = out["member1"].mask(3, (5, 4))
     assert np.abs(m0).max() > 0.1              # masks are substantial
     np.testing.assert_allclose(m0 + m1, 0, atol=1e-6)   # and cancel
+
+
+def test_secure_agg_as_first_class_protocol():
+    """``protocol="secure_agg"`` (no extra flag) is split-NN with
+    masking always on: the convergence trace equals plain split-NN
+    (masks cancel in the master's sum), and the compress combination —
+    quantizing each mask independently would break cancellation — is
+    rejected at setup."""
+    import dataclasses
+    ids, x, y = _dataset(n=128, items=2)
+    yb = (y > 0).astype(np.float64)
+    master, members = vertical_partition(ids, x, yb, widths=[4, 4],
+                                         seed=7)
+    cfg = VFLConfig(protocol="secure_agg", epochs=2, batch_size=32,
+                    lr=0.1, use_psi=False, embedding_dim=8,
+                    hidden=(16,))
+    sec = run_vfl(cfg, master, members, mode="thread")
+    plain = run_vfl(dataclasses.replace(cfg, protocol="split_nn"),
+                    master, members, mode="thread")
+    np.testing.assert_allclose(
+        [h["loss"] for h in sec["master"]["history"]],
+        [h["loss"] for h in plain["master"]["history"]],
+        rtol=1e-4, atol=1e-4)
+    assert sec["master"]["history"][-1]["loss"] \
+        < sec["master"]["history"][0]["loss"]
+
+    with pytest.raises((ValueError, RuntimeError)) as ei:
+        run_vfl(dataclasses.replace(cfg, compress=True, epochs=1),
+                master, members, mode="thread")
+    assert "compress" in str(ei.value) or "compress" in \
+        str(ei.value.__cause__)
