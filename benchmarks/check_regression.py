@@ -50,6 +50,11 @@ PER_ROW_THRESHOLD = {
     # row guards against the backoff/reset path regressing by orders
     # of magnitude, not against sub-ms scheduling jitter
     "vfl_rejoin_recovery_s": 4.0,
+    # serving rows are thread-scheduler-bound (admission queue +
+    # coalescing wakeups across 10+ threads on 2 cores): the tail row
+    # especially disperses with CPU contention, so gate on magnitude
+    "vfl_serve_qps": 3.0,
+    "vfl_serve_p99_ms": 4.0,
 }
 
 REQUIRED = {
@@ -63,6 +68,7 @@ REQUIRED = {
     "comm_roundtrip_grpc_256KiB",
     "comm_isend_encode_inline", "comm_isend_encode_offload",
     "vfl_rejoin_recovery_s",
+    "vfl_serve_qps", "vfl_serve_p99_ms",
 }
 
 

@@ -793,6 +793,10 @@ def main() -> None:
     bench_vfl_scaling()
     bench_compression()
     bench_serving()
+    # federated serving engine (persistent sessions, dynamic batching,
+    # member embed cache) — rows vfl_serve_*; lives in its own module
+    from benchmarks.bench_serve import bench_serve
+    bench_serve(emit, args.quick)
     bench_roofline()
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "bench.csv").write_text(

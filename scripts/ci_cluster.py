@@ -21,12 +21,18 @@ the chaos matrix (the default ``all`` runs the tier-1 pair):
 * **slow** — a mid-run latency spike under ``round_deadline_s`` +
   ``pipeline_depth=2`` must NOT fail the run: exit 0 with straggles
   recorded in the summary.
+* **serve** — fit + evaluate, then deploy the ``[serve]`` phase
+  (persistent federated inference, docs/serving.md); a probe
+  subprocess (scripts/ci_serve_probe.py) drives 200 concurrent
+  queries covering every row, and the served AUC must match the
+  offline evaluate within 0.01 with p99 latency bounded.
 
 Exits non-zero on the first violated assertion, printing both
-launchers' output. Stdlib only.
+launchers' output. Stdlib only (the serve probe needs repro and runs
+as a subprocess with PYTHONPATH set, like the launchers).
 
   PYTHONPATH=src python scripts/ci_cluster.py [--workdir DIR]
-      [--scenario {all,convergence,crash,partition,slow,rejoin}]
+      [--scenario {all,convergence,crash,partition,slow,rejoin,serve}]
 """
 from __future__ import annotations
 
@@ -60,7 +66,8 @@ def free_ports(n: int):
 def write_spec(path: pathlib.Path, certs: pathlib.Path, *,
                protocol: str, epochs: int, extra: str = "",
                timeout: float = 120.0,
-               protocol_extra: str = "") -> None:
+               protocol_extra: str = "",
+               phases: str = '["fit", "evaluate"]') -> None:
     p = free_ports(4)
     path.write_text(f"""
 [protocol]
@@ -73,7 +80,7 @@ use_psi = true
 embedding_dim = 16
 {protocol_extra}
 [run]
-phases = ["fit", "evaluate"]
+phases = {phases}
 
 [data]
 provider = "repro.launch.cluster:quickstart_data"
@@ -307,12 +314,69 @@ def round_slow(wd: pathlib.Path, certs: pathlib.Path) -> None:
           f"master recorded straggles (got {straggles})", outs)
 
 
+def round_serve(wd: pathlib.Path, certs: pathlib.Path) -> None:
+    spec = wd / "serve.toml"
+    sdir = wd / "serve"
+    sdir.mkdir(parents=True, exist_ok=True)
+    port = free_ports(1)[0]
+    stop = sdir / "stop"
+    # fit + offline evaluate, then serve behind the TCP frontend until
+    # the probe is done (stop_file; duration_s only as a safety bound)
+    write_spec(spec, certs, protocol="split_nn", epochs=6,
+               phases='["fit", "evaluate", "serve"]',
+               extra=(f'[serve]\nhost = "127.0.0.1"\nport = {port}\n'
+                      f'max_batch = 64\nmax_wait_ms = 2.0\n'
+                      f'duration_s = 300.0\n'
+                      f'stop_file = "{stop}"\n'))
+    procs = {h: launch(spec, h, sdir / h) for h in ("alpha", "beta")}
+    out_json = sdir / "probe.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    probe = subprocess.Popen(
+        [PYTHON, str(REPO / "scripts" / "ci_serve_probe.py"),
+         "--port", str(port), "--requests", "200",
+         "--out", str(out_json)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=str(REPO))
+    try:
+        probe_out, _ = probe.communicate(timeout=600)
+    except subprocess.TimeoutExpired:
+        probe.kill()
+        probe_out, _ = probe.communicate()
+    finally:
+        stop.write_text("done")         # end the serve phase either way
+    outs = wait_both(procs, timeout=120)
+    print(f"\n===== probe output =====\n{probe_out}")
+    check(probe.returncode == 0,
+          f"probe completed its query load (rc {probe.returncode})",
+          outs)
+    rcs = {h: p.returncode for h, p in procs.items()}
+    check(rcs == {"alpha": 0, "beta": 0},
+          f"both launchers exited 0 after serving (got {rcs})", outs)
+    res = json.loads(out_json.read_text())
+    check(res["requests"] >= 200,
+          f"probe drove {res['requests']} concurrent queries (>= 200)",
+          outs)
+    check(res["p99_ms"] < 2000.0,
+          f"served p99 bounded ({res['p99_ms']:.1f}ms < 2000ms)", outs)
+    summary = master_summary(outs)
+    auc_off = summary["agents"]["master"]["evaluate"]["auc"]
+    check(abs(res["auc"] - auc_off) < 0.01,
+          f"served AUC matches offline evaluate "
+          f"({res['auc']:.4f} vs {auc_off:.4f})", outs)
+    srv = summary["agents"]["master"].get("serve") or {}
+    check(srv.get("requests", 0) >= res["requests"],
+          f"master serve stats recorded the load (got {srv})", outs)
+
+
 SCENARIOS = {
     "convergence": round_convergence,
     "crash": round_crash,
     "rejoin": round_rejoin,
     "partition": round_partition,
     "slow": round_slow,
+    "serve": round_serve,
 }
 
 
@@ -333,10 +397,11 @@ def main() -> None:
              "PYTHONPATH": str(REPO / "src")}).returncode
     check(rc == 0, "test CA + certificates minted")
     if args.scenario == "all":
-        # the tier-1 pair every CI run gets; the rest of the matrix is
+        # the tier-1 set every CI run gets; the rest of the matrix is
         # dispatched per-scenario by the chaos-matrix workflow job
         round_convergence(wd, certs)
         round_crash(wd, certs)
+        round_serve(wd, certs)
     else:
         SCENARIOS[args.scenario](wd, certs)
     print("ci_cluster: ALL OK")

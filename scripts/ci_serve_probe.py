@@ -1,0 +1,138 @@
+"""Serve-phase load probe for scripts/ci_cluster.py.
+
+Launched as a subprocess with PYTHONPATH=src (the CI cluster driver
+itself stays stdlib-only): connects to the cluster's serve frontend,
+fires ``--requests`` concurrent queries that together cover every
+matched row exactly once, and writes a JSON verdict with the served
+AUC (computed against the locally rebuilt quickstart labels — the
+agreed sample order is the sorted id intersection, a wire-schema
+contract) plus latency quantiles. The CI driver compares the served
+AUC against the cluster's own offline ``evaluate`` summary.
+
+  PYTHONPATH=src python scripts/ci_serve_probe.py \\
+      --port 18080 --requests 200 --out probe.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import queue
+import sys
+import threading
+import time
+
+import numpy as np
+
+
+def _percentile(lat, q):
+    s = sorted(lat)
+    return s[min(len(s) - 1, int(q * len(s)))] if s else 0.0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--threads", type=int, default=16)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--connect-timeout", type=float, default=480.0)
+    args = ap.parse_args()
+
+    from repro.launch.cluster import quickstart_data
+    from repro.serve.federated import ServeClient
+    from repro.train.evals import recsys_report
+
+    # rebuild the labels in the cluster's row order: the agreed sample
+    # order is sorted(common ids) (comm/schema "match/order")
+    md = quickstart_data("master", seed=args.seed)
+    mb = quickstart_data("member0", seed=args.seed)
+    order = sorted(set(md.ids) & set(mb.ids))
+    pos = {i: k for k, i in enumerate(md.ids)}
+    y = np.asarray(md.y)[[pos[o] for o in order]]
+    n = len(order)
+
+    # wait for the frontend (the cluster is still fitting when the CI
+    # driver starts this probe)
+    deadline = time.monotonic() + args.connect_timeout
+    while True:
+        c = ServeClient(args.host, args.port, timeout=60.0)
+        try:
+            c.query(np.array([0]))
+            c.close()
+            break
+        except OSError:
+            c.close()
+            if time.monotonic() > deadline:
+                print("probe: frontend never came up", file=sys.stderr)
+                return 1
+            time.sleep(0.5)
+
+    # --requests concurrent queries covering rows 0..n-1 exactly once
+    chunks = np.array_split(np.arange(n, dtype=np.int64),
+                            args.requests)
+    work: "queue.Queue" = queue.Queue()
+    for qid, rows in enumerate(chunks):
+        work.put((qid, rows))
+    scores = [None] * len(chunks)
+    lat, errs = [], []
+    lock = threading.Lock()
+
+    def run() -> None:
+        cli = ServeClient(args.host, args.port, timeout=60.0)
+        try:
+            while True:
+                try:
+                    qid, rows = work.get_nowait()
+                except queue.Empty:
+                    return
+                t0 = time.perf_counter()
+                try:
+                    s = cli.query(rows)
+                except Exception as e:          # noqa: BLE001
+                    with lock:
+                        errs.append(f"query {qid}: {e!r}")
+                    continue
+                dt = time.perf_counter() - t0
+                with lock:
+                    scores[qid] = np.asarray(s)
+                    lat.append(dt)
+        finally:
+            cli.close()
+
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=run) for _ in range(args.threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(600)
+    wall = time.perf_counter() - t0
+
+    if errs or any(s is None for s in scores):
+        print(f"probe: {len(errs)} failed queries: {errs[:5]}",
+              file=sys.stderr)
+        return 1
+
+    served = np.concatenate(scores, axis=0)
+    report = recsys_report(served, y, k=5)
+    with ServeClient(args.host, args.port, timeout=60.0) as cli:
+        serve_stats = cli.stats()
+
+    out = {
+        "rows": n,
+        "requests": len(chunks),
+        "qps": len(chunks) / wall,
+        "p50_ms": _percentile(lat, 0.50) * 1e3,
+        "p99_ms": _percentile(lat, 0.99) * 1e3,
+        "auc": float(report["auc"]),
+        "serve_stats": serve_stats,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"probe: {json.dumps(out)[:400]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

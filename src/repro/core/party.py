@@ -110,6 +110,17 @@ class PartyMaster(VFLAgent):
     def evaluate(self, rows=None) -> Dict[str, Any]:
         return self.driver.evaluate(rows)
 
+    # persistent serving session (docs/serving.md): open once, answer
+    # many query rounds, close before the next fit/shutdown
+    def serve_open(self) -> None:
+        self.driver.serve_open()
+
+    def serve_query(self, rows, **kw):
+        return self.driver.serve_query(rows, **kw)
+
+    def serve_close(self) -> None:
+        self.driver.serve_close()
+
     def shutdown(self) -> Dict[str, Any]:
         self.driver.shutdown_world()
         self.driver.proto.close()
@@ -171,6 +182,12 @@ def _drive_master(driver: Driver, cmd_q, res_q) -> Dict[str, Any]:
                 r = driver.predict(**kw)
             elif cmd == "evaluate":
                 r = driver.evaluate(**kw)
+            elif cmd == "serve_open":
+                r = driver.serve_open()
+            elif cmd == "serve_query":
+                r = driver.serve_query(**kw)
+            elif cmd == "serve_close":
+                r = driver.serve_close()
             else:
                 raise ValueError(f"unknown job command {cmd!r}")
         except BaseException as e:
@@ -424,6 +441,25 @@ class VFLJob:
                  timeout: float = 3600.0) -> Dict[str, Any]:
         """Predict + the protocol's metrics vs the master's labels."""
         return self._call("evaluate", timeout=timeout, rows=rows)
+
+    # -- persistent serving session (docs/serving.md) ------------------------
+    def serve_open(self, timeout: float = 600.0) -> None:
+        """Open a long-lived predict phase: members park in their round
+        loop and every subsequent :meth:`serve_query` costs exactly one
+        federated round (no per-query phase handshake). Pair with
+        :meth:`serve_close`; :class:`repro.serve.federated.FederatedServer`
+        drives this API with admission control and dynamic batching."""
+        self._call("serve_open", timeout=timeout)
+
+    def serve_query(self, rows, timeout: float = 3600.0, **kw):
+        """One inference round inside an open serve session; returns
+        scores in ``rows`` order (duplicates cross the wire once)."""
+        return self._call("serve_query", timeout=timeout, rows=rows,
+                          **kw)
+
+    def serve_close(self, timeout: float = 600.0) -> None:
+        """End the serve session opened by :meth:`serve_open`."""
+        self._call("serve_close", timeout=timeout)
 
     def shutdown(self, timeout: float = 600.0) -> Dict[str, Any]:
         """End the federation and return per-role result dicts (the

@@ -66,6 +66,12 @@ class VFLConfig:
     # the straggle recorded in CommStats. 0 = disabled (wait forever,
     # i.e. the transport timeout).
     round_deadline_s: float = 0.0
+    # member-side LRU cache of per-row feature-slice embeddings for the
+    # predict/serve path (docs/serving.md): recsys query streams repeat
+    # hot users, so members answering EVAL rounds skip the bottom-model
+    # forward for cached row ids. Capacity in rows; 0 = disabled.
+    # Invalidated whenever a fit phase starts (parameters change).
+    serve_cache_rows: int = 0
 
 
 @dataclass

@@ -39,10 +39,10 @@ import os
 import pickle
 import queue
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -204,6 +204,23 @@ class VFLProtocol:
         """Answer one feature-slice query during predict/eval."""
         raise NotImplementedError
 
+    # -- serving cache hooks (optional; docs/serving.md) ---------------------
+    def predict_embed(self, rows: np.ndarray) -> Optional[np.ndarray]:
+        """Pure per-row embedding compute for ``rows`` — no comm, no
+        per-query masking — or ``None`` when the protocol cannot split
+        its predict path (the driver then bypasses the embedding cache
+        and calls :meth:`predict_member` directly). Row ``i`` of the
+        result must depend only on row ``i`` of the input, so cached
+        and freshly computed rows can be mixed within one query."""
+        return None
+
+    def send_embed(self, u: np.ndarray, rows: np.ndarray) -> None:
+        """Ship precomputed embeddings ``u`` for ``rows`` to the master,
+        applying any per-query transform (e.g. pairwise secure-agg
+        masks) that must NOT be cached. Protocols overriding
+        :meth:`predict_embed` must override this too."""
+        raise NotImplementedError
+
     def evaluate_master(self, scores: np.ndarray,
                         rows: np.ndarray) -> Dict[str, float]:
         """Metrics for predicted ``scores`` vs the master's labels."""
@@ -348,6 +365,66 @@ class EvalEveryEpoch(Callback):
 # ---------------------------------------------------------------------------
 
 
+class EmbedCache:
+    """Bounded LRU of per-row member embeddings for the serve path
+    (``cfg.serve_cache_rows``; docs/serving.md). Keys are matched-order
+    row ids (int), values the member's *unmasked* embedding row —
+    per-query transforms (secure-agg masks) are applied after lookup by
+    :meth:`VFLProtocol.send_embed`. Cleared whenever a fit phase starts."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def lookup(self, rows: np.ndarray
+               ) -> Tuple[Dict[int, np.ndarray], np.ndarray]:
+        """Split ``rows`` into (found, missing). ``found`` maps row id ->
+        cached embedding; ``missing`` keeps query order, deduplicated."""
+        found: Dict[int, np.ndarray] = {}
+        missing: List[int] = []
+        seen_missing = set()
+        for r in rows:
+            r = int(r)
+            if r in found or r in seen_missing:
+                continue
+            v = self._d.get(r)
+            if v is not None:
+                self._d.move_to_end(r)
+                found[r] = v
+                self.hits += 1
+            else:
+                seen_missing.add(r)
+                missing.append(r)
+                self.misses += 1
+        return found, np.asarray(missing, dtype=rows.dtype)
+
+    def insert(self, rows: np.ndarray, u: np.ndarray) -> None:
+        for i, r in enumerate(rows):
+            self._d[int(r)] = u[i]
+            self._d.move_to_end(int(r))
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self) -> None:
+        if self._d:
+            self.invalidations += 1
+        self._d.clear()
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"rows": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations}
+
+
 def _step_payload(op: int, epoch: int, lo: int, hi: int):
     # explicit dtype: bare np.array([int]) is int32 on some platforms,
     # which would fail the declared-int64 schema check
@@ -385,6 +462,9 @@ class Driver:
         # one dict per recovered peer: role, master step at rejoin, the
         # peer's restored step, and how long the rejoin handshake took
         self.recoveries: List[Dict[str, Any]] = []
+        # member-side serve cache (cfg.serve_cache_rows); lazily built on
+        # the first EVAL round a cache-capable protocol answers
+        self._embed_cache: Optional[EmbedCache] = None
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -450,6 +530,8 @@ class Driver:
     def result(self) -> Dict[str, Any]:
         out = {**self.proto.finalize(), "comm": self.ch.stats.as_dict(),
                "phase_s": dict(self.phase_s)}
+        if self._embed_cache is not None:
+            out["embed_cache"] = self._embed_cache.as_dict()
         if self.role == "master":
             out["history"] = list(self.history)
             out["n_common"] = self.n
@@ -640,18 +722,56 @@ class Driver:
         parts = []
         for lo in range(0, len(rows), bs):
             sub = rows[lo:lo + bs]
-            step = _step_payload(OP_EVAL, -1, lo, lo + len(sub))
+            # duplicate row ids inside one batch (coalesced serving
+            # queries hit the same hot users) are computed and shipped
+            # once and re-expanded on return; already-unique batches
+            # take the original path untouched, so training-time traces
+            # stay bit-identical
+            uniq, inv = np.unique(sub, return_inverse=True)
+            wire = uniq if len(uniq) < len(sub) else sub
+            step = _step_payload(OP_EVAL, -1, lo, lo + len(wire))
             # one coalesced frame per member: the EVAL announcement and
             # its query rows ride a single wire message (DESIGN.md §7)
             for m in self.ch.members:
                 with self.ch.frame(m):
                     self.ch.send(m, "ctrl/step", step)
-                    self.ch.send(m, "predict/rows", {"rows": sub})
+                    self.ch.send(m, "predict/rows", {"rows": wire})
             if "arbiter" in self.ch.world:
                 self.ch.send("arbiter", "ctrl/step", step)
-            parts.append(np.asarray(self.proto.predict_master(sub)))
+            scores = np.asarray(self.proto.predict_master(wire))
+            if wire is uniq:
+                scores = scores[inv]
+            parts.append(scores)
         return np.concatenate(parts, axis=0) if parts else \
             np.zeros((0, 1))
+
+    # -- persistent serving session (docs/serving.md) ------------------------
+    def serve_open(self) -> None:
+        """Open a long-lived predict phase: one ``ctrl/phase`` broadcast
+        parks every member in its EVAL round loop, after which
+        :meth:`serve_query` answers each coalesced query batch with a
+        single round — no per-query phase handshake. Close with
+        :meth:`serve_close` before fitting or shutting down."""
+        assert self.role == "master"
+        self.ch.stats.phase = "serve"
+        self.ch.broadcast("ctrl/phase",
+                          {"op": np.array([PHASE_PREDICT], np.int64)},
+                          targets=self._others)
+
+    def serve_query(self, rows: np.ndarray,
+                    batch_size: Optional[int] = None) -> np.ndarray:
+        """One federated inference round inside an open serve session.
+        Scores come back in ``rows`` order; duplicates within the batch
+        cross the wire once (see :meth:`predict_now`)."""
+        assert self.role == "master"
+        return self.predict_now(rows, batch_size or len(rows) or None)
+
+    def serve_close(self) -> None:
+        """End the serve session: members drain back to their phase
+        wait loop."""
+        assert self.role == "master"
+        self.ch.broadcast("ctrl/step", _step_payload(OP_END, -1, 0, 0),
+                          targets=self._others)
 
     def evaluate(self, rows: Optional[np.ndarray] = None) -> Dict[str, Any]:
         assert self.role == "master"
@@ -689,13 +809,21 @@ class Driver:
             t0 = time.perf_counter()
             if op == PHASE_FIT:
                 self.ch.stats.phase = "fit"
+                if self._embed_cache is not None:
+                    # refit invalidates every cached embedding — the
+                    # bottom model is about to change
+                    self._embed_cache.invalidate()
                 self._invoke("on_fit_start")
                 self._follow_steps()
                 self._invoke("on_fit_end")
                 self._timed("fit", t0)
             elif op == PHASE_PREDICT:
                 self.ch.stats.phase = "predict"
-                self._follow_steps()
+                # a predict phase may be a long-lived serving session
+                # with idle gaps between queries far beyond the
+                # transport timeout — wait for rounds as patiently as
+                # for phase announcements
+                self._follow_steps(idle_timeout=idle_timeout)
                 self._timed("predict", t0)
             else:
                 raise ValueError(f"{self.role}: unknown phase op {op}")
@@ -725,7 +853,7 @@ class Driver:
         self._timed("fit", t0)
         return self.follow(idle_timeout)
 
-    def _follow_steps(self) -> None:
+    def _follow_steps(self, idle_timeout: Optional[float] = None) -> None:
         """Reactive round loop. Synchronous members execute each RUN
         round in place; with ``pipeline_depth=D >= 2`` a
         pipeline-capable member keeps up to D rounds in flight — the
@@ -734,7 +862,10 @@ class Driver:
         phase ends. The master computes every round it announced, so
         draining the window at END never blocks on a missing reply.
         EVAL rounds are answered immediately with the current (possibly
-        bounded-stale) parameters."""
+        bounded-stale) parameters. ``idle_timeout`` (serving sessions)
+        makes the wait for the *next* round patient — transport
+        timeouts between queries are retried until the budget runs
+        out; within a round, timeouts stay strict."""
         cfg = self.cfg
         depth = max(1, int(cfg.pipeline_depth))
         pipelined = (depth > 1 and self.role != "arbiter"
@@ -747,8 +878,21 @@ class Driver:
             self.proto.member_stage_recv(rows0, step0, ctx0)
             self._invoke("on_batch_end", step0, epoch0, None)
 
+        def _next_step():
+            if idle_timeout is None:
+                return self.ch.recv("master", "ctrl/step")
+            deadline = time.monotonic() + idle_timeout
+            while True:
+                try:
+                    return self.ch.recv("master", "ctrl/step")
+                except (queue.Empty, TimeoutError):
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"{self.role}: no serve round within "
+                            f"{idle_timeout}s")
+
         while True:
-            msg = self.ch.recv("master", "ctrl/step")
+            msg = _next_step()
             op = int(msg.tensor("op")[0])
             if op == OP_END:
                 while inflight:
@@ -785,9 +929,36 @@ class Driver:
                 if self.role != "arbiter":
                     rows = self.ch.recv("master",
                                         "predict/rows").tensor("rows")
-                    self.proto.predict_member(np.asarray(rows))
+                    self._answer_eval(np.asarray(rows))
             else:
                 raise ValueError(f"{self.role}: unknown step op {op}")
+
+    def _answer_eval(self, rows: np.ndarray) -> None:
+        """Answer one EVAL query, through the embedding cache when the
+        protocol supports the split predict path and
+        ``cfg.serve_cache_rows > 0``."""
+        if self.cfg.serve_cache_rows <= 0:
+            self.proto.predict_member(rows)
+            return
+        if self._embed_cache is None:
+            self._embed_cache = EmbedCache(self.cfg.serve_cache_rows)
+        cache = self._embed_cache
+        found, missing = cache.lookup(rows)
+        if len(missing):
+            fresh = self.proto.predict_embed(missing)
+            if fresh is None:
+                # protocol can't split compute from comm — fall back
+                # (undo the speculative stat counts for this query)
+                cache.misses -= len(missing)
+                cache.hits -= len(found)
+                self.proto.predict_member(rows)
+                return
+            fresh = np.asarray(fresh)
+            cache.insert(missing, fresh)
+            found.update(
+                {int(r): fresh[i] for i, r in enumerate(missing)})
+        u = np.stack([found[int(r)] for r in rows], axis=0)
+        self.proto.send_embed(u, rows)
 
 
 def load_checkpoint(directory, role: str) -> Optional[Dict[str, Any]]:

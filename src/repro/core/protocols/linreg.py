@@ -95,8 +95,13 @@ class LinRegProtocol(VFLProtocol):
         return z
 
     def predict_member(self, rows) -> None:
-        self.ch.send("master", "linreg/pred_z",
-                     {"z": self.x[rows] @ self.w})
+        self.send_embed(self.predict_embed(rows), rows)
+
+    def predict_embed(self, rows) -> np.ndarray:
+        return self.x[rows] @ self.w
+
+    def send_embed(self, z, rows) -> None:
+        self.ch.send("master", "linreg/pred_z", {"z": np.asarray(z)})
 
     def evaluate_master(self, scores, rows) -> Dict[str, float]:
         return {"mse": float(np.mean((scores - self.y[rows]) ** 2))}

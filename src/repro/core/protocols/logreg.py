@@ -197,8 +197,15 @@ class LogRegHEProtocol(VFLProtocol):
         return _sigmoid(z)
 
     def predict_member(self, rows) -> None:
-        self.ch.send("master", "logreg/pred_z",
-                     {"z": self.x[rows] @ self.w})
+        self.send_embed(self.predict_embed(rows), rows)
+
+    def predict_embed(self, rows) -> np.ndarray:
+        # the member "embedding" is its partial logit slice — row-wise
+        # dot products, safely cacheable per row id
+        return self.x[rows] @ self.w
+
+    def send_embed(self, z, rows) -> None:
+        self.ch.send("master", "logreg/pred_z", {"z": np.asarray(z)})
 
     def evaluate_master(self, scores, rows) -> Dict[str, float]:
         from repro.train.evals import auc

@@ -187,14 +187,21 @@ class SplitNNProtocol(VFLProtocol):
         return np.asarray(mlp_apply(self.top, u))
 
     def predict_member(self, rows) -> None:
-        u = np.asarray(_member_fwd(self.params, self.x[rows]))
+        self.send_embed(self.predict_embed(rows), rows)
+
+    def predict_embed(self, rows) -> np.ndarray:
+        # pure bottom-model forward: cacheable per row (no masking —
+        # masks are per-query and applied in send_embed)
+        return np.asarray(_member_fwd(self.params, self.x[rows]))
+
+    def send_embed(self, u, rows) -> None:
         if self.masker is not None:
             # predict queries get the same pairwise masking as training
             # rounds — the master only ever sees the aggregate
             u = np.asarray(u + self.masker.mask(self._pred_step, u.shape),
                            np.float32)
             self._pred_step += 1
-        self.ch.send("master", "splitnn/pred_u", {"u": u})
+        self.ch.send("master", "splitnn/pred_u", {"u": np.asarray(u)})
 
     def evaluate_master(self, scores, rows) -> Dict[str, float]:
         from repro.train.evals import recsys_report

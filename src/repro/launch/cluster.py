@@ -221,6 +221,25 @@ class ChaosSpec:
 
 
 @dataclass
+class ServeSpec:
+    """The spec's ``[serve]`` table: deploy a persistent federated
+    inference service (docs/serving.md) when ``"serve"`` appears in
+    ``[run] phases``. The master hosts a
+    :class:`~repro.serve.federated.FederatedServer` behind a TCP
+    frontend; members stay parked in the serve session answering
+    coalesced query rounds."""
+
+    port: int = 18080                 # frontend port on the master's host
+    host: str = "0.0.0.0"             # frontend bind address
+    max_batch: int = 64               # rows per federated round
+    max_wait_ms: float = 2.0          # batcher hold for an under-full round
+    admission_limit: int = 4096       # queued-row bound before shedding
+    cache_rows: int = 0               # member embed-cache capacity (rows)
+    duration_s: float = 0.0           # serve window; 0 = until stop_file
+    stop_file: str = ""               # path whose appearance ends serving
+
+
+@dataclass
 class ClusterSpec:
     """Parsed cluster spec — everything a launcher (or
     :meth:`~repro.core.party.VFLJob.from_spec`) needs to run the
@@ -253,6 +272,7 @@ class ClusterSpec:
     # per-role restart policies; "*" is the member-wide default set by
     # flat [restart] keys, explicit [restart.<role>] entries override
     restart: Dict[str, RestartPolicy] = field(default_factory=dict)
+    serve: Optional[ServeSpec] = None
 
     # -- structure -----------------------------------------------------------
     @property
@@ -304,8 +324,15 @@ class ClusterSpec:
                 f"host (duplicates: {sorted(dup)}, unassigned: "
                 f"{sorted(missing)}, unknown: {sorted(unknown)})")
         for phase in self.run_phases:
-            if phase not in ("fit", "evaluate", "predict"):
+            if phase not in ("fit", "evaluate", "predict", "serve"):
                 raise ValueError(f"[run] unknown phase {phase!r}")
+        if "serve" in self.run_phases:
+            ss = self.serve or ServeSpec()
+            if ss.duration_s <= 0 and not ss.stop_file:
+                raise ValueError(
+                    "[serve] needs a bounded lifetime: set duration_s "
+                    "> 0 and/or stop_file (the service ends when the "
+                    "window closes or the file appears)")
         if self.chaos is not None:
             if self.chaos.role not in have:
                 raise ValueError(f"[chaos] role {self.chaos.role!r} is "
@@ -456,6 +483,20 @@ def _spec_from_dict(raw: Dict[str, Any],
                              f"(valid: {sorted(ckeys)})")
         chaos = ChaosSpec(**{**chaos_raw, "step": int(chaos_raw["step"])})
 
+    serve_raw = raw.get("serve")
+    serve = None
+    if serve_raw:
+        skeys = {f.name for f in fields(ServeSpec)}
+        unknown = set(serve_raw) - skeys
+        if unknown:
+            raise ValueError(f"[serve] unknown keys {sorted(unknown)} "
+                             f"(valid: {sorted(skeys)})")
+        serve = ServeSpec(**serve_raw)
+        if serve.cache_rows:
+            # the member-side embed cache is a protocol knob — every
+            # agent's VFLConfig must agree on it
+            cfg.serve_cache_rows = int(serve.cache_rows)
+
     restart_raw = dict(raw.get("restart") or {})
     rkeys = {f.name for f in fields(RestartPolicy)}
 
@@ -483,7 +524,7 @@ def _spec_from_dict(raw: Dict[str, Any],
         run_phases=list(run.get("phases", ["fit"])),
         data_provider=provider, data_kwargs=data,
         barrier_timeout=float(barrier), control_tls=bool(control_tls),
-        chaos=chaos, restart=restart)
+        chaos=chaos, restart=restart, serve=serve)
 
 
 # ---------------------------------------------------------------------------
@@ -598,6 +639,37 @@ def _chaos_callbacks(spec: ClusterSpec, role: str) -> List[Callback]:
     raise ValueError(f"unknown chaos scenario {ch.scenario!r}")
 
 
+def _serve_phase(spec: ClusterSpec, agent) -> Dict[str, Any]:
+    """Master-side ``serve`` phase: host the federated inference
+    service behind its TCP frontend until the spec's lifetime ends
+    (``duration_s`` elapsed and/or ``stop_file`` appeared), then return
+    the final ServeStats snapshot for the summary."""
+    from repro.serve.federated import (FederatedServer, ServeCfg,
+                                       ServeFrontend)
+    ss = spec.serve or ServeSpec()
+    scfg = ServeCfg(max_batch=ss.max_batch, max_wait_ms=ss.max_wait_ms,
+                    admission_limit=ss.admission_limit,
+                    cache_rows=ss.cache_rows)
+    srv = FederatedServer(agent, scfg).start()
+    fe = ServeFrontend(srv, host=ss.host, port=ss.port)
+    try:
+        print(f"[master] serving on {ss.host}:{fe.port} "
+              f"(max_batch={ss.max_batch} "
+              f"max_wait_ms={ss.max_wait_ms})", flush=True)
+        deadline = time.monotonic() + ss.duration_s \
+            if ss.duration_s > 0 else None
+        stop = pathlib.Path(ss.stop_file) if ss.stop_file else None
+        while True:
+            time.sleep(0.25)
+            if deadline is not None and time.monotonic() > deadline:
+                break
+            if stop is not None and stop.exists():
+                break
+    finally:
+        fe.close()
+    return srv.stop()
+
+
 def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
                         status_q, rejoin: bool = False) -> None:
     """Entry point of one spawned agent process (module-level for
@@ -663,6 +735,8 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
                 elif phase == "predict":
                     scores = agent.predict()
                     summary["predict"] = {"rows": int(scores.shape[0])}
+                elif phase == "serve":
+                    summary["serve"] = _serve_phase(spec, agent)
             res = agent.shutdown()
             summary["comm"] = _json_safe(res.get("comm"))
             status_q.put(("ok", role, summary))

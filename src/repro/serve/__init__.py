@@ -1,1 +1,4 @@
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.federated import (AdmissionError,  # noqa: F401
+                                   FederatedServer, ServeCfg, ServeClient,
+                                   ServeFrontend, ServeStats)

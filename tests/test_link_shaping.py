@@ -8,6 +8,7 @@ import dataclasses
 import json
 import pathlib
 import socket
+import threading
 import time
 
 import numpy as np
@@ -265,6 +266,95 @@ def test_grpc_wire_is_http2_shaped():
         conn.close()
     finally:
         ca.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP/2 flow control (RFC 7540 §5.2 / §6.9): the server advertises
+# SETTINGS_INITIAL_WINDOW_SIZE and replenishes with WINDOW_UPDATE; the
+# client blocks DATA writes on the advertised credit
+# ---------------------------------------------------------------------------
+
+
+def test_grpc_flow_control_large_payload_roundtrips():
+    """A payload larger than the server's 16 MiB advertised window only
+    crosses because WINDOW_UPDATE replenishment keeps granting credit;
+    a client that ignored flow control would overrun, one that never
+    saw credit would stall."""
+    addrs = local_addresses(["a", "b"])
+    ca = GrpcCommunicator("a", addrs, timeout=60.0)
+    cb = GrpcCommunicator("b", addrs, timeout=60.0)
+    try:
+        big = np.random.default_rng(0).normal(size=(3 << 20,))  # 24 MiB
+        ca.send("b", "big", {"x": big})
+        np.testing.assert_array_equal(
+            cb.recv("a", "big").tensor("x"), big)
+        cb.send("a", "big2", {"x": big[: 1 << 20]})
+        np.testing.assert_array_equal(
+            ca.recv("b", "big2").tensor("x"), big[: 1 << 20])
+    finally:
+        ca.close()
+        cb.close()
+
+
+def test_grpc_client_honors_server_settings_window():
+    """The per-connection reader applies the server's
+    SETTINGS_INITIAL_WINDOW_SIZE advertisement and connection-level
+    WINDOW_UPDATE — the flow state must not sit at the RFC default."""
+    from repro.comm.grpc import DEFAULT_WINDOW, RECV_WINDOW
+    addrs = local_addresses(["a", "b"])
+    ca = GrpcCommunicator("a", addrs, timeout=30.0)
+    cb = GrpcCommunicator("b", addrs, timeout=30.0)
+    try:
+        ca.send("b", "t", {"x": np.zeros(2)})
+        cb.recv("a", "t")
+        deadline = time.monotonic() + 5.0
+        fc = None
+        while time.monotonic() < deadline:
+            fc = next(iter(ca._fc.values()), None)
+            if fc is not None and fc.initial_window == RECV_WINDOW \
+                    and fc.conn_window > DEFAULT_WINDOW:
+                break
+            time.sleep(0.01)
+        assert fc is not None
+        assert fc.initial_window == RECV_WINDOW
+        assert fc.conn_window > DEFAULT_WINDOW
+    finally:
+        ca.close()
+        cb.close()
+
+
+def test_flow_state_blocks_until_credit_and_stall_is_attributed():
+    from repro.comm.grpc import _FlowState
+    fs = _FlowState()
+    fs.open_stream(1)
+    fs.conn_window = 8
+    fs.consume(1, 8, timeout=1.0, who="b")          # exact fit
+    timer = threading.Timer(0.2, lambda: fs.window_update(0, 64))
+    timer.start()
+    t0 = time.monotonic()
+    fs.consume(1, 10, timeout=5.0, who="b")         # blocks, then passes
+    assert time.monotonic() - t0 >= 0.15
+    with pytest.raises(ConnectionError, match="flow-control stall"):
+        fs.consume(1, 1 << 30, timeout=0.2, who="b")
+    fs.close()
+    with pytest.raises(ConnectionError, match="connection lost"):
+        fs.consume(1, 1, timeout=0.2, who="b")
+
+
+def test_flow_state_settings_delta_adjusts_open_streams():
+    """RFC 7540 §6.9.2: a mid-connection SETTINGS change shifts every
+    open stream window by the delta; the connection window is
+    untouched."""
+    from repro.comm.grpc import DEFAULT_WINDOW, _FlowState
+    fs = _FlowState()
+    fs.open_stream(1)
+    fs.consume(1, 100, timeout=1.0, who="b")
+    fs.apply_settings(70000)
+    assert fs.initial_window == 70000
+    assert fs.streams[1] == DEFAULT_WINDOW - 100 + (70000 - DEFAULT_WINDOW)
+    assert fs.conn_window == DEFAULT_WINDOW - 100
+    fs.open_stream(3)                               # new stream: new initial
+    assert fs.streams[3] == 70000
 
 
 def test_grpc_midstream_drop_attributed_and_raises():

@@ -1,0 +1,351 @@
+"""Federated serving engine (repro.serve.federated + the driver's
+serve session): served scores are bit-identical to offline predict on
+the same rows, concurrent queries coalesce into shared rounds and demux
+correctly, duplicate rows cross the wire once, the member embed cache
+hits on hot rows and is invalidated by refit, admission control sheds
+load instead of queueing unboundedly, and the TCP frontend + serve
+sessions hold up over grpc + TLS and at pipeline_depth >= 2."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm.base import CommCfg
+from repro.core.party import VFLJob
+from repro.core.protocols.base import VFLConfig
+from repro.core.protocols.driver import EmbedCache
+from repro.data.vertical import vertical_partition
+from repro.serve.federated import (AdmissionError, FederatedServer,
+                                   ServeCfg, ServeClient, ServeFrontend)
+
+
+def _dataset(n=96, d=10, items=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, items))
+    y = x @ w * 0.4 + rng.normal(scale=0.05, size=(n, items))
+    ids = [f"u{i:05d}" for i in range(n)]
+    return vertical_partition(ids, x, y, widths=[4, 3], overlap=1.0,
+                              seed=1)
+
+
+def _linreg_cfg(**kw):
+    return VFLConfig(protocol="linreg", epochs=2, batch_size=32, lr=0.1,
+                     seed=0, use_psi=False, **kw)
+
+
+def _splitnn_case(**kw):
+    rng = np.random.default_rng(0)
+    n, d = 96, 12
+    x = rng.normal(size=(n, d))
+    y = (x @ rng.normal(size=(d, 2)) > 0).astype(np.float64)
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y, widths=[5], seed=3)
+    cfg = VFLConfig(protocol="split_nn", epochs=2, batch_size=32, lr=0.1,
+                    seed=0, use_psi=False, embedding_dim=8, hidden=(16,),
+                    **kw)
+    return cfg, master, members
+
+
+# ---------------------------------------------------------------------------
+# serve session == offline predict
+# ---------------------------------------------------------------------------
+
+
+def test_serve_query_bit_identical_to_offline_predict():
+    """A serve-session round on a row batch returns exactly what
+    ``predict`` returns for the same batch (same wire, same math)."""
+    master, members = _dataset()
+    rows = np.array([3, 17, 40, 8, 77, 21])
+    with VFLJob(_linreg_cfg(), master, members) as job:
+        job.fit()
+        offline = job.predict(rows=rows, batch_size=len(rows))
+        job.serve_open()
+        served1 = job.serve_query(rows=rows)
+        served2 = job.serve_query(rows=rows)
+        job.serve_close()
+        np.testing.assert_array_equal(served1, offline)
+        np.testing.assert_array_equal(served2, offline)
+        # the session is over: plain phases still work afterwards
+        np.testing.assert_array_equal(
+            job.predict(rows=rows, batch_size=len(rows)), offline)
+
+
+def test_predict_dedupes_duplicate_rows_on_the_wire():
+    """Duplicate row ids inside one batch are computed once and
+    re-expanded in request order — exactly equal to querying the
+    sorted unique rows and indexing back."""
+    master, members = _dataset()
+    dup = np.array([5, 1, 5, 5, 2, 1, 40])
+    uniq, inv = np.unique(dup, return_inverse=True)
+    with VFLJob(_linreg_cfg(), master, members) as job:
+        job.fit()
+        got = job.predict(rows=dup, batch_size=len(dup))
+        ref = job.predict(rows=uniq, batch_size=len(uniq))
+        np.testing.assert_array_equal(got, ref[inv])
+
+
+# ---------------------------------------------------------------------------
+# FederatedServer: admission -> coalesce -> demux
+# ---------------------------------------------------------------------------
+
+
+def test_server_coalesces_concurrent_queries_and_demuxes():
+    master, members = _dataset()
+    with VFLJob(_linreg_cfg(), master, members) as job:
+        job.fit()
+        full = job.predict()
+        scfg = ServeCfg(max_batch=64, max_wait_ms=50.0)
+        with FederatedServer(job, scfg) as server:
+            queries = [np.arange(i * 6, i * 6 + 6) for i in range(12)]
+            results = [None] * len(queries)
+
+            def run(i):
+                results[i] = server.query(queries[i])
+
+            ts = [threading.Thread(target=run, args=(i,))
+                  for i in range(len(queries))]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(60)
+            for i, q in enumerate(queries):
+                np.testing.assert_array_equal(results[i], full[q])
+            stats = server.stats.as_dict()
+        assert stats["requests"] == 12
+        assert stats["rows_in"] == 72
+        assert stats["batches"] < 12          # coalescing happened
+        assert stats["avg_batch_rows"] > 6
+        assert stats["queue_s"] >= 0.0
+        assert stats["exchange_s"] > 0.0
+        assert stats["p50_ms"] > 0.0 and stats["p99_ms"] >= stats["p50_ms"]
+
+
+def test_request_trace_stamps_are_ordered():
+    master, members = _dataset()
+    with VFLJob(_linreg_cfg(), master, members) as job:
+        job.fit()
+        with FederatedServer(job, ServeCfg(max_wait_ms=0.0)) as server:
+            p = server.submit(np.arange(5))
+            assert p.done.wait(30)
+        assert p.t_admit <= p.t_coalesce <= p.t_exchange <= p.t_done
+        t = p.trace()
+        assert t["queue_s"] >= 0.0 and t["exchange_s"] > 0.0
+        assert t["total_s"] >= t["exchange_s"]
+
+
+def test_admission_limit_sheds_load():
+    server = FederatedServer(object(), ServeCfg(admission_limit=8))
+    # no batcher started: the queue cannot drain, so the limit is hit
+    server.submit(np.arange(5))
+    with pytest.raises(AdmissionError):
+        server.submit(np.arange(4))
+    assert server.stats.rejected == 1
+    server.submit(np.arange(3))               # exactly at the limit
+
+
+def test_round_failure_propagates_to_callers():
+    class Broken:
+        def serve_open(self):
+            pass
+
+        def serve_query(self, rows):
+            raise RuntimeError("boom")
+
+        def serve_close(self):
+            pass
+
+    server = FederatedServer(Broken(), ServeCfg(max_wait_ms=0.0))
+    server.start()
+    with pytest.raises(RuntimeError, match="federated round failed"):
+        server.query(np.arange(3), timeout=30)
+    with pytest.raises(RuntimeError):
+        server.submit(np.arange(3))
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# member-side embed cache
+# ---------------------------------------------------------------------------
+
+
+def test_embed_cache_lru_and_invalidate():
+    cache = EmbedCache(capacity=3)
+    rows = np.array([1, 2, 3])
+    found, missing = cache.lookup(rows)
+    assert not found and list(missing) == [1, 2, 3]
+    cache.insert(missing, np.arange(6.0).reshape(3, 2))
+    found, missing = cache.lookup(np.array([2, 3, 4]))
+    assert set(found) == {2, 3} and list(missing) == [4]
+    cache.insert(missing, np.zeros((1, 2)))   # evicts LRU row 1
+    found, missing = cache.lookup(np.array([1]))
+    assert not found and list(missing) == [1]
+    assert cache.evictions == 1
+    cache.invalidate()
+    found, missing = cache.lookup(np.array([2]))
+    assert not found and cache.invalidations == 1
+    d = cache.as_dict()
+    assert d["capacity"] == 3 and d["hits"] == 2
+
+
+def test_serve_cache_hits_and_scores_unchanged():
+    cfg, master, members = _splitnn_case(serve_cache_rows=32)
+    rows = np.arange(16)
+    with VFLJob(cfg, master, members) as job:
+        job.fit()
+        job.serve_open()
+        first = job.serve_query(rows=rows)
+        second = job.serve_query(rows=rows)    # all rows hot
+        job.serve_close()
+        np.testing.assert_array_equal(first, second)
+        res = job.shutdown()
+    cache = res["member0"]["embed_cache"]
+    assert cache["hits"] >= len(rows)          # second pass was cached
+    assert cache["rows"] == len(rows)
+
+
+def test_refit_invalidates_member_cache():
+    """fit -> serve -> fit -> serve must match the same sequence with
+    the cache off: stale embeddings surviving the refit would poison
+    the second session's scores."""
+    rows = np.arange(12)
+
+    def run(cache_rows):
+        cfg, master, members = _splitnn_case(
+            serve_cache_rows=cache_rows)
+        with VFLJob(cfg, master, members) as job:
+            job.fit()
+            job.serve_open()
+            job.serve_query(rows=rows)         # populate the cache
+            job.serve_close()
+            job.fit()                          # params change
+            job.serve_open()
+            scores = job.serve_query(rows=rows)
+            job.serve_close()
+            res = job.shutdown()
+        return scores, res["member0"].get("embed_cache")
+
+    cached, cstats = run(cache_rows=32)
+    plain, _ = run(cache_rows=0)
+    np.testing.assert_array_equal(cached, plain)
+    assert cstats["invalidations"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# TCP frontend
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_roundtrip_and_stats():
+    master, members = _dataset()
+    with VFLJob(_linreg_cfg(), master, members) as job:
+        job.fit()
+        ref = job.predict()
+        with FederatedServer(job, ServeCfg(max_wait_ms=1.0)) as server:
+            fe = ServeFrontend(server, host="127.0.0.1", port=0)
+            try:
+                with ServeClient("127.0.0.1", fe.port) as cli:
+                    rows = np.array([4, 9, 4, 30])
+                    np.testing.assert_array_equal(cli.query(rows),
+                                                  ref[rows])
+                    stats = cli.stats()
+                    assert stats["requests"] == 1
+                    from repro.comm import codec
+                    _, meta = cli._roundtrip(
+                        codec.encode({}, {"op": "nope"}))
+                    assert "unknown op" in meta.get("error", "")
+            finally:
+                fe.close()
+
+
+def test_frontend_reports_admission_rejects():
+    class Slow:
+        def serve_open(self):
+            pass
+
+        def serve_query(self, rows):
+            time.sleep(0.3)
+            return np.zeros((len(rows), 1))
+
+        def serve_close(self):
+            pass
+
+    server = FederatedServer(Slow(), ServeCfg(admission_limit=4,
+                                              max_wait_ms=0.0))
+    server.start()
+    fe = ServeFrontend(server, host="127.0.0.1", port=0)
+    try:
+        c1 = ServeClient("127.0.0.1", fe.port)
+        c2 = ServeClient("127.0.0.1", fe.port)
+        t = threading.Thread(
+            target=lambda: c1.query(np.arange(4)))
+        t.start()
+        deadline = time.monotonic() + 5.0     # round in flight, queue empty
+        while (server.stats.batches < 1 or server._queued_rows) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        server.submit(np.arange(4))           # fills the queue
+        with pytest.raises(AdmissionError):
+            c2.query(np.arange(2))
+        t.join(30)
+        c1.close()
+        c2.close()
+    finally:
+        fe.close()
+        server.stop()
+    assert server.stats.rejected >= 1
+
+
+# ---------------------------------------------------------------------------
+# serve sessions across engines: depth >= 2 and grpc + TLS
+# ---------------------------------------------------------------------------
+
+
+def test_serve_session_at_pipeline_depth_2():
+    """A pipelined fit drains cleanly into a serve session, and predict
+    at depth >= 2 answers row subsets exactly like the full pass."""
+    cfg, master, members = _splitnn_case(pipeline_depth=2)
+    rows = np.array([7, 3, 50, 11])
+    with VFLJob(cfg, master, members) as job:
+        job.fit()
+        offline = job.predict(rows=rows, batch_size=len(rows))
+        job.serve_open()
+        served = job.serve_query(rows=rows)
+        job.serve_close()
+        np.testing.assert_array_equal(served, offline)
+        job.fit()                              # refit after serving
+        assert job.predict().shape[0] > 0
+
+
+def test_serve_session_over_grpc_tls():
+    from repro.launch.certs import TestCA, have_openssl
+    if not have_openssl():
+        pytest.skip("openssl CLI required to mint test certs")
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        ca = TestCA(td)
+        for n in ("master", "member0", "member1"):
+            ca.issue(n)
+        comm = CommCfg(timeout=60.0, tls=ca.templated_spec())
+        master, members = _dataset()
+        rows = np.array([2, 44, 2, 19])
+        with VFLJob(_linreg_cfg(), master, members, mode="grpc",
+                    comm_cfg=comm) as job:
+            job.fit()
+            offline = job.predict(rows=rows, batch_size=len(rows))
+            with FederatedServer(job, ServeCfg(max_wait_ms=5.0)) \
+                    as server:
+                outs = [None, None]
+
+                def run(i):
+                    outs[i] = server.query(rows)
+
+                ts = [threading.Thread(target=run, args=(i,))
+                      for i in range(2)]
+                for t in ts:
+                    t.start()
+                for t in ts:
+                    t.join(60)
+            np.testing.assert_array_equal(outs[0], offline)
+            np.testing.assert_array_equal(outs[1], offline)
