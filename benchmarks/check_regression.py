@@ -64,6 +64,7 @@ REQUIRED = {
     "vfl_async_splitnn_wan_d1", "vfl_async_splitnn_wan_d2",
     "vfl_async_splitnn_wan_d4",
     "vfl_async_logreg_he_overlap_d1", "vfl_async_logreg_he_overlap_d2",
+    "vfl_async_logreg_he_wan_d1", "vfl_async_logreg_he_wan_d2",
     "comm_socket_small_nagle", "comm_socket_small_nodelay",
     "comm_roundtrip_grpc_256KiB",
     "comm_isend_encode_inline", "comm_isend_encode_offload",

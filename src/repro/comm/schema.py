@@ -423,6 +423,20 @@ class TypedChannel:
 
         return RecvFuture(_resolve, _peek)
 
+    def recv_parts(self, frm: str, name: str,
+                   timeout: Optional[float] = None):
+        """Receive one logically streamed payload sent as N consecutive
+        chunk messages of the same stepped type (DESIGN.md §10.2): the
+        first chunk's ``meta["parts"]`` declares the stream length
+        (absent = a plain single message). Yields each chunk as it
+        arrives — sequence numbering already orders the stream — so the
+        consumer overlaps its per-chunk work (e.g. ciphertext
+        decryption) with later chunks still on the wire."""
+        first = self.recv(frm, name, timeout=timeout)
+        yield first
+        for _ in range(int(first.meta.get("parts", "1")) - 1):
+            yield self.recv(frm, name, timeout=timeout)
+
     # -- collectives ---------------------------------------------------------
     def broadcast(self, name: str, payload: Payload,
                   targets: Optional[Sequence[str]] = None,

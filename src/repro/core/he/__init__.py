@@ -7,6 +7,9 @@ into packing / CRT / pool submodules (DESIGN.md §3):
              packed homomorphic matvec, Straus multi-exponentiation.
 - pool:      precomputed r^n blinding pool (fixed-base comb + optional
              background fill) making hot-path encryption two mults.
+- decrypt_pool: arbiter-side process pool CRT-decrypting ciphertext
+             chunks in parallel with order-preserving reassembly and
+             attributed worker-crash propagation (DESIGN.md §10.1).
 
 ``from repro.core import he`` keeps working: everything public is
 re-exported here.
@@ -21,6 +24,8 @@ from repro.core.he.packing import (GUARD_BITS, decrypt_packed,
                                    max_slots, multi_pow, pack_signed,
                                    packed_matvec, pow_tables,
                                    unpack_matvec, unpack_signed)
+from repro.core.he.decrypt_pool import (DecryptPool, DecryptSession,
+                                        DecryptWorkerError)
 from repro.core.he.pool import RandomnessPool
 
 __all__ = [
@@ -29,5 +34,6 @@ __all__ = [
     "add_cipher", "matvec_cipher", "pack_signed", "unpack_signed",
     "max_slots", "encrypt_packed", "decrypt_packed", "multi_pow",
     "pow_tables", "matvec_slot_plan", "packed_matvec", "unpack_matvec",
-    "RandomnessPool",
+    "RandomnessPool", "DecryptPool", "DecryptSession",
+    "DecryptWorkerError",
 ]

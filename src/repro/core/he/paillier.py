@@ -183,8 +183,19 @@ def encrypt_vector(pub: PublicKey, x: np.ndarray, pool=None) -> np.ndarray:
 
 
 def decrypt_vector(priv: PrivateKey, c: np.ndarray,
-                   scale_bits: int = SCALE_BITS) -> np.ndarray:
-    flat = [priv.decrypt_int(int(v)) for v in np.ravel(c)]
+                   scale_bits: int = SCALE_BITS, pool=None,
+                   chunk: int = 64) -> np.ndarray:
+    """Decrypt a ciphertext array. With ``pool`` (a
+    :class:`~repro.core.he.decrypt_pool.DecryptPool`) the ciphertexts
+    stream through the worker pool in ``chunk``-sized pieces; without
+    one, the serial path binds the CRT dispatch once instead of
+    re-resolving it per element."""
+    cts = [int(v) for v in np.ravel(c)]
+    if pool is not None:
+        flat = pool.decrypt_many(cts, chunk=chunk)
+    else:
+        dec = priv.decrypt_int_crt if priv.p else priv.decrypt_int_plain
+        flat = [dec(v) for v in cts]
     return decode_fixed(flat, np.shape(c), scale_bits)
 
 

@@ -55,6 +55,13 @@ class RandomnessPool:
         self._alive = False
         self._thread: Optional[threading.Thread] = None
         self._generated = 0
+        # hot-path accounting: a hit popped a pooled blinding (two-mult
+        # encryption); a fallback generated inline on the caller's
+        # critical path — sustained fallbacks mean the prefetch target
+        # is too small for the training cadence (e.g. pipeline_depth
+        # outpacing the background filler)
+        self.hits = 0
+        self.fallbacks = 0
 
     # -- generation ----------------------------------------------------------
     def _gen(self) -> int:
@@ -74,7 +81,11 @@ class RandomnessPool:
         with self._cv:
             rn = self._items.popleft() if self._items else None
             self._cv.notify_all()
-        return rn if rn is not None else self._gen()
+        if rn is not None:
+            self.hits += 1
+            return rn
+        self.fallbacks += 1
+        return self._gen()
 
     def prefill(self, count: int) -> None:
         for _ in range(count):
@@ -113,6 +124,12 @@ class RandomnessPool:
     def __len__(self) -> int:
         with self._cv:
             return len(self._items)
+
+    def stats(self) -> dict:
+        """Hot-path counters: pooled hits vs inline fallbacks (and the
+        total blindings generated, background + inline)."""
+        return {"hits": self.hits, "fallbacks": self.fallbacks,
+                "generated": self._generated, "pooled": len(self)}
 
     # -- convenience ---------------------------------------------------------
     def encrypt_int(self, m: int) -> int:

@@ -56,7 +56,13 @@ from repro.core.protocols import secure_agg as _sec_agg   # noqa: F401
 def world_for(cfg: VFLConfig, n_members: int) -> List[str]:
     world = ["master"] + [f"member{i}" for i in range(n_members)]
     if resolve_protocol(cfg.protocol).needs_arbiter:
-        world.append("arbiter")
+        # key-sharded decryption (DESIGN.md §10.3): n_arbiters >= 2
+        # adds "arbiter1", ... — the bare "arbiter" name stays so
+        # single-arbiter worlds (and their recorded traces) are
+        # untouched
+        n_arb = max(1, int(getattr(cfg, "n_arbiters", 1)))
+        world += ["arbiter" if i == 0 else f"arbiter{i}"
+                  for i in range(n_arb)]
     return world
 
 
@@ -318,8 +324,9 @@ class VFLJob:
         datas: Dict[str, Any] = {"master": master_data}
         for i, md in enumerate(member_datas):
             datas[f"member{i}"] = md
-        if "arbiter" in self.world:
-            datas["arbiter"] = None
+        for w in self.world:
+            if w.startswith("arbiter"):
+                datas[w] = None
 
         self._results: Dict[str, Any] = {}
         self._failed: Optional[BaseException] = None

@@ -72,6 +72,23 @@ class VFLConfig:
     # forward for cached row ids. Capacity in rows; 0 = disabled.
     # Invalidated whenever a fit phase starts (parameters change).
     serve_cache_rows: int = 0
+    # key-sharded multi-arbiter decryption (DESIGN.md §10.3): N >= 2
+    # runs N arbiter agents ("arbiter", "arbiter1", ...), each with its
+    # OWN Paillier keypair decrypting a contiguous slice of every
+    # member's gradient columns. The master encrypts the residual once
+    # per arbiter key; no single arbiter ever sees a full gradient.
+    # (Key-per-shard, not threshold cryptography — documented tradeoff.)
+    n_arbiters: int = 1
+    # streamed ciphertext rounds (DESIGN.md §10.2): split each
+    # Enc(gradient) message into up to this many schema-framed chunks
+    # isent back-to-back, so the arbiter starts decrypting chunk 0
+    # while later chunks are still on the wire. 0/1 = single message
+    # (the seed wire format, bit-identical traces).
+    he_stream_chunks: int = 0
+    # arbiter-side decrypt worker pool (DESIGN.md §10.1): CRT
+    # decryption fans out over this many OS processes (bigint pow holds
+    # the GIL). 0 = inline serial decryption (the seed path).
+    he_decrypt_workers: int = 0
 
 
 @dataclass

@@ -148,7 +148,9 @@ class VFLProtocol:
 
     @property
     def is_arbiter(self) -> bool:
-        return self.role == "arbiter"
+        # key-sharded decryption (cfg.n_arbiters >= 2) names its agents
+        # "arbiter", "arbiter1", ... — all of them are arbiter-role
+        return self.role.startswith("arbiter")
 
     # -- lifecycle hooks (override what the protocol needs) ------------------
     def match(self) -> Optional[List[str]]:
@@ -195,6 +197,13 @@ class VFLProtocol:
 
     def arbiter_round(self, step: int) -> None:
         """One arbiter service round (e.g. decrypt-and-return)."""
+
+    def on_window_drain(self) -> None:
+        """Called on members when the driver drains its pipeline window
+        (phase end): protocols that defer part of a round past its recv
+        stage — e.g. the HE gradient apply at ``pipeline_depth >= 2``
+        (DESIGN.md §10.2) — flush the remainder here so the next phase
+        (predict/eval) sees fully applied state."""
 
     def predict_master(self, rows: np.ndarray) -> np.ndarray:
         """Assemble joint scores for ``rows`` of the matched order."""
@@ -469,8 +478,11 @@ class Driver:
     # -- helpers -------------------------------------------------------------
     @property
     def _others(self) -> List[str]:
-        extra = ["arbiter"] if "arbiter" in self.ch.world else []
-        return self.ch.members + extra
+        return self.ch.members + self._arbiters
+
+    @property
+    def _arbiters(self) -> List[str]:
+        return [w for w in self.ch.world if w.startswith("arbiter")]
 
     def _invoke(self, hook: str, *args) -> None:
         for cb in self.callbacks:
@@ -736,8 +748,8 @@ class Driver:
                 with self.ch.frame(m):
                     self.ch.send(m, "ctrl/step", step)
                     self.ch.send(m, "predict/rows", {"rows": wire})
-            if "arbiter" in self.ch.world:
-                self.ch.send("arbiter", "ctrl/step", step)
+            for arb in self._arbiters:
+                self.ch.send(arb, "ctrl/step", step)
             scores = np.asarray(self.proto.predict_master(wire))
             if wire is uniq:
                 scores = scores[inv]
@@ -868,7 +880,8 @@ class Driver:
         out; within a round, timeouts stay strict."""
         cfg = self.cfg
         depth = max(1, int(cfg.pipeline_depth))
-        pipelined = (depth > 1 and self.role != "arbiter"
+        arbiter = self.role.startswith("arbiter")
+        pipelined = (depth > 1 and not arbiter
                      and self.proto.supports_pipeline)
         inflight: "deque" = deque()       # (rows, step, epoch, ctx)
         cached_epoch, perm = None, None
@@ -897,6 +910,8 @@ class Driver:
             if op == OP_END:
                 while inflight:
                     _complete_one()
+                if not arbiter:
+                    self.proto.on_window_drain()
                 return
             epoch = int(msg.tensor("epoch")[0])
             lo, hi = int(msg.tensor("lo")[0]), int(msg.tensor("hi")[0])
@@ -905,7 +920,7 @@ class Driver:
                     perm = batch_order(self.n, self.cfg, epoch)
                     cached_epoch = epoch
                 rows = perm[lo:hi]
-                if self.role == "arbiter":
+                if arbiter:
                     self.proto.arbiter_round(self.global_step)
                     self.global_step += 1
                     self._pos = (epoch, -1)
@@ -926,7 +941,7 @@ class Driver:
                     self.global_step += 1
                     self._pos = (epoch, -1)
             elif op == OP_EVAL:
-                if self.role != "arbiter":
+                if not arbiter:
                     rows = self.ch.recv("master",
                                         "predict/rows").tensor("rows")
                     self._answer_eval(np.asarray(rows))

@@ -571,6 +571,29 @@ def linreg_demo_data(role: str, n: int = 192, d: int = 12,
     return None
 
 
+def logreg_he_demo_data(role: str, n: int = 192, d: int = 12,
+                        widths: Sequence[int] = (5, 5),
+                        seed: int = 0, **_: Any):
+    """Synthetic vertically-partitioned binary-classification set for
+    ``logreg_he`` cluster smokes (master keeps the remainder columns
+    plus the labels; arbiter roles — however many the spec's
+    ``n_arbiters`` asks for — get no data at all)."""
+    from repro.data.vertical import vertical_partition
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, 1))
+    y = (1.0 / (1.0 + np.exp(-(x @ w))) > 0.5).astype(np.float64)
+    ids = [f"u{i:05d}" for i in range(n)]
+    master, members = vertical_partition(ids, x, y,
+                                         widths=list(widths),
+                                         overlap=1.0, seed=1)
+    if role == "master":
+        return master
+    if role.startswith("member"):
+        return members[int(role[len("member"):])]
+    return None
+
+
 # ---------------------------------------------------------------------------
 # agent child process
 # ---------------------------------------------------------------------------
