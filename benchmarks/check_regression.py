@@ -27,6 +27,17 @@ Rows in the baseline but missing from the fresh run fail the gate too
   python benchmarks/check_regression.py \\
       benchmarks/results/bench.json benchmarks/results/baseline.json \\
       --threshold 1.5 --prefix vfl_async_ --prefix comm_
+
+``--privacy privacy.json`` additionally (or instead, when the bench
+positionals are omitted) gates the adversarial-harness rows written by
+``repro.attacks.runner`` (docs/privacy.md): every required
+(protocol, attack, defense) cell must be present, the undefended
+attacks must demonstrably work (leakage AUC floor — a broken attack
+would silently vacate every defense claim), and the gated defenses
+must hold leakage under 0.6 within their utility budget.
+
+  python benchmarks/check_regression.py \\
+      --privacy benchmarks/results/privacy.json
 """
 from __future__ import annotations
 
@@ -73,6 +84,63 @@ REQUIRED = {
 }
 
 
+# privacy gate (repro.attacks.runner rows). Keys are (protocol,
+# attack, defense); every listed cell must exist. min_leak asserts the
+# attack itself works (an undefended exchange that stopped leaking
+# means the harness broke, not that privacy improved); max_leak
+# asserts the defense works; max_delta bounds the utility cost vs the
+# undefended run of the same protocol. int8 has no max_leak on
+# purpose: quantization error is far below label structure and the
+# row exists to document that compression is NOT a privacy mechanism.
+PRIVACY_GATES = {
+    ("logreg_he", "grad_direction", "none"): {"min_leak": 0.75},
+    ("logreg_he", "grad_direction", "noise"): {"max_leak": 0.6,
+                                               "max_delta": 0.02},
+    ("split_nn", "embed_probe", "none"): {"min_leak": 0.65},
+    ("split_nn", "embed_cluster", "none"): {"min_leak": 0.6},
+    ("split_nn", "embed_probe", "noise"): {"max_leak": 0.6},
+    ("split_nn", "embed_cluster", "noise"): {"max_leak": 0.6},
+    ("split_nn", "embed_probe", "int8"): {"max_delta": 0.02},
+    ("split_nn", "embed_cluster", "int8"): {},
+    ("split_nn", "embed_probe", "secure_agg"): {"max_leak": 0.6,
+                                                "max_delta": 0.02},
+    ("split_nn", "embed_cluster", "secure_agg"): {"max_leak": 0.6},
+}
+
+
+def check_privacy(path: str) -> list:
+    """Gate the privacy.json rows; returns failure strings (empty =
+    pass). Split out so tests drive it without argparse."""
+    failures = []
+    rows = {(r["protocol"], r["attack"], r["defense"]): r
+            for r in json.load(open(path))}
+    for key, gate in PRIVACY_GATES.items():
+        name = "/".join(key)
+        row = rows.get(key)
+        if row is None:
+            failures.append(f"privacy row missing: {name}")
+            continue
+        leak = float(row["leakage_auc"])
+        delta = abs(float(row["utility_delta"]))
+        checks = []
+        if "min_leak" in gate:
+            checks.append((leak >= gate["min_leak"],
+                           f"leakage {leak:.3f} >= {gate['min_leak']}"
+                           f" (attack must work)"))
+        if "max_leak" in gate:
+            checks.append((leak < gate["max_leak"],
+                           f"leakage {leak:.3f} < {gate['max_leak']}"))
+        if "max_delta" in gate:
+            checks.append((delta <= gate["max_delta"],
+                           f"|utility_delta| {delta:.3f} <= "
+                           f"{gate['max_delta']}"))
+        for ok, what in checks:
+            print(f"{'OK ' if ok else 'PRIVACY-FAIL'} {name}: {what}")
+            if not ok:
+                failures.append(f"{name}: {what} violated")
+    return failures
+
+
 def _rows(path: str) -> Dict[str, float]:
     return {r["name"]: float(r["us_per_call"])
             for r in json.load(open(path))}
@@ -80,20 +148,39 @@ def _rows(path: str) -> Dict[str, float]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("bench", help="fresh bench.json")
-    ap.add_argument("baseline", help="committed baseline.json")
+    ap.add_argument("bench", nargs="?", help="fresh bench.json")
+    ap.add_argument("baseline", nargs="?",
+                    help="committed baseline.json")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="fail when new > baseline * threshold "
                          "(default 1.5)")
     ap.add_argument("--prefix", action="append", default=None,
                     help="row-name prefixes to gate (repeatable; "
                          "default: vfl_async_ and comm_)")
+    ap.add_argument("--privacy", default=None,
+                    help="also gate adversarial-harness rows "
+                         "(privacy.json from repro.attacks.runner)")
     args = ap.parse_args()
     prefixes = tuple(args.prefix or ("vfl_async_", "comm_"))
 
+    failures = []
+    if args.privacy:
+        failures += check_privacy(args.privacy)
+    if args.bench is None:
+        if not args.privacy:
+            ap.error("need bench+baseline positionals, --privacy, "
+                     "or both")
+        if failures:
+            print("\n".join(f"FAIL: {f}" for f in failures),
+                  file=sys.stderr)
+            return 1
+        print(f"privacy gate: {len(PRIVACY_GATES)} cells OK")
+        return 0
+    if args.baseline is None:
+        ap.error("bench given without baseline")
+
     new = _rows(args.bench)
     base = _rows(args.baseline)
-    failures = []
 
     missing = REQUIRED - set(new)
     if missing:

@@ -26,13 +26,24 @@ the chaos matrix (the default ``all`` runs the tier-1 pair):
   subprocess (scripts/ci_serve_probe.py) drives 200 concurrent
   queries covering every row, and the served AUC must match the
   offline evaluate within 0.01 with p99 latency bounded.
+* **multi_crash** — a ``[chaos]`` role *list* crashes BOTH members in
+  the same round (correlated failure); both launchers must exit
+  non-zero fast with the fault attributed.
+* **master_member_crash** — master and member crash together; with no
+  survivor to coordinate, each launcher must still notice its own
+  agent's death and exit non-zero attributed.
+* **crash_loop** — ``[chaos] repeat=true`` under ``[restart]``
+  supervision: the respawned member resumes at/past the chaos step
+  and re-crashes until ``max_restarts`` is exhausted; the run must
+  END in an attributed terminal failure, not a supervision livelock.
 
 Exits non-zero on the first violated assertion, printing both
 launchers' output. Stdlib only (the serve probe needs repro and runs
 as a subprocess with PYTHONPATH set, like the launchers).
 
   PYTHONPATH=src python scripts/ci_cluster.py [--workdir DIR]
-      [--scenario {all,convergence,crash,partition,slow,rejoin,serve}]
+      [--scenario {all,convergence,crash,partition,slow,rejoin,serve,
+                   multi_crash,master_member_crash,crash_loop}]
 """
 from __future__ import annotations
 
@@ -67,8 +78,16 @@ def write_spec(path: pathlib.Path, certs: pathlib.Path, *,
                protocol: str, epochs: int, extra: str = "",
                timeout: float = 120.0,
                protocol_extra: str = "",
-               phases: str = '["fit", "evaluate"]') -> None:
-    p = free_ports(4)
+               phases: str = '["fit", "evaluate"]',
+               provider: str = "repro.launch.cluster:quickstart_data",
+               members: int = 1) -> None:
+    # alpha owns the master, beta owns every member (>1 member only
+    # for providers that ship more than one silo, e.g. the linreg demo)
+    p = free_ports(3 + members)
+    names = [f"member{i}" for i in range(members)]
+    agent_lines = "\n".join(
+        f'{m} = "127.0.0.1:{p[1 + i]}"' for i, m in enumerate(names))
+    beta_agents = "[" + ", ".join(f'"{m}"' for m in names) + "]"
     path.write_text(f"""
 [protocol]
 name = "{protocol}"
@@ -83,7 +102,7 @@ embedding_dim = 16
 phases = {phases}
 
 [data]
-provider = "repro.launch.cluster:quickstart_data"
+provider = "{provider}"
 seed = 0
 
 [comm]
@@ -98,15 +117,15 @@ ca = "{certs}/ca.crt"
 
 [agents]
 master = "127.0.0.1:{p[0]}"
-member0 = "127.0.0.1:{p[1]}"
+{agent_lines}
 
 [hosts.alpha]
-control = "127.0.0.1:{p[2]}"
+control = "127.0.0.1:{p[1 + members]}"
 agents = ["master"]
 
 [hosts.beta]
-control = "127.0.0.1:{p[3]}"
-agents = ["member0"]
+control = "127.0.0.1:{p[2 + members]}"
+agents = {beta_agents}
 {extra}
 """)
 
@@ -314,6 +333,89 @@ def round_slow(wd: pathlib.Path, certs: pathlib.Path) -> None:
           f"master recorded straggles (got {straggles})", outs)
 
 
+def round_multi_crash(wd: pathlib.Path, certs: pathlib.Path) -> None:
+    spec = wd / "multi_crash.toml"
+    # correlated failure: BOTH members crash in the same round (a
+    # [chaos] role *list*). The member host sees two near-simultaneous
+    # deaths; its launcher must fail once, attributed, and the master
+    # host must follow via the control channel — no hang
+    write_spec(spec, certs, protocol="linreg", epochs=100,
+               members=2,
+               provider="repro.launch.cluster:linreg_demo_data",
+               extra=('[chaos]\nrole = ["member0", "member1"]\n'
+                      'step = 5\nscenario = "crash"\n'))
+    t0 = time.monotonic()
+    _, outs, rcs = run_pair(spec, wd / "multi_crash", timeout=180)
+    dt = time.monotonic() - t0
+    check(all(rc not in (0, None) for rc in rcs.values()),
+          f"both launchers exited non-zero after the correlated "
+          f"member crash (got {rcs})", outs)
+    check(dt < 120.0,
+          f"correlated failure propagated in {dt:.1f}s (< 120s)", outs)
+    check("chaos: injected crash" in outs["beta"],
+          "beta launcher output attributes the injected crash", outs)
+    check(any(f"agent member{i} FAILED" in outs["beta"]
+              for i in (0, 1)),
+          "beta launcher output names a crashed member", outs)
+
+
+def round_master_member_crash(wd: pathlib.Path,
+                              certs: pathlib.Path) -> None:
+    spec = wd / "mm_crash.toml"
+    # master AND member crash in the same round: neither host has a
+    # survivor to coordinate shutdown, so each launcher must notice
+    # its OWN agent's death locally and still exit non-zero fast
+    write_spec(spec, certs, protocol="split_nn", epochs=100,
+               extra=('[chaos]\nrole = ["master", "member0"]\n'
+                      'step = 5\nscenario = "crash"\n'))
+    t0 = time.monotonic()
+    _, outs, rcs = run_pair(spec, wd / "mm_crash", timeout=300)
+    dt = time.monotonic() - t0
+    check(all(rc not in (0, None) for rc in rcs.values()),
+          f"both launchers exited non-zero after the master+member "
+          f"crash (got {rcs})", outs)
+    check(dt < 240.0,
+          f"correlated failure propagated in {dt:.1f}s (< 240s)", outs)
+    # both victims die in the same round, so which failure a given
+    # launcher reports first (its own agent vs the peer's ctl/fail) is
+    # a race — require attribution, not a specific victim
+    for host in ("alpha", "beta"):
+        check("FAILED" in outs[host]
+              and "chaos: injected crash" in outs[host],
+              f"{host} launcher attributes the injected crash", outs)
+
+
+def round_crash_loop(wd: pathlib.Path, certs: pathlib.Path) -> None:
+    spec = wd / "crash_loop.toml"
+    # a repeating fault under supervision: [chaos] repeat=true re-arms
+    # the crash on every respawn, and the checkpoint-restored member
+    # resumes at/past the chaos step — so it dies again immediately,
+    # burning the whole [restart] budget. The scenario must END (no
+    # supervision livelock): budget exhaustion logged and attributed,
+    # both launchers non-zero, bounded wall clock
+    write_spec(spec, certs, protocol="split_nn", epochs=100,
+               extra=('[chaos]\nrole = "member0"\nstep = 5\n'
+                      'scenario = "crash"\nrepeat = true\n\n'
+                      '[restart.member0]\npolicy = "on_failure"\n'
+                      'max_restarts = 2\nbackoff_s = 0.2\n'
+                      'backoff_max_s = 0.5\nwait_s = 90.0\n'))
+    t0 = time.monotonic()
+    _, outs, rcs = run_pair(spec, wd / "crash_loop", timeout=420)
+    dt = time.monotonic() - t0
+    check(all(rc not in (0, None) for rc in rcs.values()),
+          f"both launchers exited non-zero after the crash loop "
+          f"(got {rcs})", outs)
+    check(dt < 360.0, f"crash loop terminated in {dt:.1f}s (< 360s)",
+          outs)
+    check("restart 2/2" in outs["beta"],
+          "member0 was respawned up to its budget", outs)
+    check("exhausted its restart budget (2)" in outs["beta"],
+          "beta launcher attributes the exhausted restart budget",
+          outs)
+    check("agent member0 FAILED" in outs["beta"],
+          "beta launcher names the terminally failed member", outs)
+
+
 def round_serve(wd: pathlib.Path, certs: pathlib.Path) -> None:
     spec = wd / "serve.toml"
     sdir = wd / "serve"
@@ -377,6 +479,9 @@ SCENARIOS = {
     "partition": round_partition,
     "slow": round_slow,
     "serve": round_serve,
+    "multi_crash": round_multi_crash,
+    "master_member_crash": round_master_member_crash,
+    "crash_loop": round_crash_loop,
 }
 
 
@@ -392,7 +497,7 @@ def main() -> None:
     certs = wd / "certs"
     rc = subprocess.run(
         [PYTHON, "-m", "repro.launch.certs", "--dir", str(certs),
-         "--agents", "master", "member0", "alpha", "beta"],
+         "--agents", "master", "member0", "member1", "alpha", "beta"],
         env={**os.environ,
              "PYTHONPATH": str(REPO / "src")}).returncode
     check(rc == 0, "test CA + certificates minted")

@@ -1,0 +1,21 @@
+"""Adversarial VFL harness (docs/privacy.md): label-inference attacks
+run offline over captured exchanges, and the defense matrix that turns
+the repo's privacy posture into regression-tested numbers.
+
+The package never touches a live channel: :class:`AttackHarness` runs a
+normal :class:`~repro.core.party.VFLJob` with
+``cfg.capture_exchanges=True`` (the driver-level exchange-capture hook)
+and replays the recorded per-round embeddings / decrypted gradients
+through the attacks in :mod:`repro.attacks.label_inference`. The
+defense sweep lives in :mod:`repro.attacks.runner` and writes
+``benchmarks/results/privacy.json``, gated by
+``benchmarks/check_regression.py --privacy``.
+"""
+from repro.attacks.harness import AttackHarness
+from repro.attacks.label_inference import (cluster_attack,
+                                           gradient_direction_attack,
+                                           probe_attack)
+from repro.attacks.runner import run_privacy_matrix
+
+__all__ = ["AttackHarness", "gradient_direction_attack",
+           "cluster_attack", "probe_attack", "run_privacy_matrix"]

@@ -204,6 +204,11 @@ class TypedChannel:
         self.round_deadline: Optional[float] = None
         self._last_msg: Dict[tuple, Message] = {}
         self._stale_futs: Dict[tuple, list] = {}
+        # adversarial exchange capture (docs/privacy.md): the driver
+        # installs an ExchangeCapture here when cfg.capture_exchanges
+        # is on. None (the default) keeps every hot path at a single
+        # is-None check — capture-off runs are bit-identical (tested).
+        self.capture = None
 
     # mirror the communicator's identity surface so match/protocol code
     # can treat a TypedChannel as "the comm with types"
@@ -285,6 +290,10 @@ class TypedChannel:
         if to in self.down:
             return          # dropped before seq/EF advance: the peer's
         #                     whole channel state resets at rejoin
+        if self.capture is not None:
+            # pre-_prepare: the plaintext this party emits, before
+            # compression/masking bookkeeping mutates the payload
+            self.capture.record("send", to, name, payload)
         try:
             mt, seq, payload, meta = self._prepare(to, name, payload,
                                                    meta)
@@ -305,6 +314,8 @@ class TypedChannel:
         None when buffered into an open frame)."""
         if to in self.down:
             return None
+        if self.capture is not None:
+            self.capture.record("send", to, name, payload)
         try:
             mt, seq, payload, meta = self._prepare(to, name, payload,
                                                    meta)
@@ -400,6 +411,11 @@ class TypedChannel:
         if mt.stepped:
             self._recv_seq[(frm, name)] = seq + 1
         _check(mt, msg.payload, msg.meta, "recv")
+        if self.capture is not None:
+            # post-decompress/post-check: exactly the plaintext this
+            # party observes (so e.g. int8 quantization error is part
+            # of what a captured-exchange adversary sees)
+            self.capture.record("recv", frm, name, msg.payload)
         return msg
 
     def irecv(self, frm: str, name: str) -> RecvFuture:
@@ -414,6 +430,8 @@ class TypedChannel:
         def _resolve(timeout: Optional[float]) -> Message:
             msg = self._pull(frm, mt, seq, timeout)
             _check(mt, msg.payload, msg.meta, "recv")
+            if self.capture is not None:
+                self.capture.record("recv", frm, name, msg.payload)
             return msg
 
         def _peek() -> bool:

@@ -89,6 +89,21 @@ class VFLConfig:
     # decryption fans out over this many OS processes (bigint pow holds
     # the GIL). 0 = inline serial decryption (the seed path).
     he_decrypt_workers: int = 0
+    # Gaussian noising defense (docs/privacy.md): each party adds
+    # N(0, (noise_sigma * rms(signal))^2) noise to the label-bearing
+    # exchange it emits — members noise split-NN embeddings before
+    # sending, the arbiter noises decrypted logreg gradients before
+    # returning them. Deterministic per (seed, round, party); 0.0 is
+    # bit-identical to the un-noised path (no rng is ever constructed).
+    noise_sigma: float = 0.0
+    # adversarial exchange capture (docs/privacy.md): when True every
+    # party records the plaintext payloads it sends and receives on the
+    # label-bearing message types (split-NN embeddings, decrypted logreg
+    # gradients, step announcements) into an in-memory ExchangeCapture
+    # exported through ``Driver.result()["capture"]``. Off by default —
+    # the tap is a ``None`` check on the hot path and capture-off runs
+    # are trace-bit-identical to the seed fixtures (tested).
+    capture_exchanges: bool = False
 
 
 @dataclass
@@ -109,6 +124,29 @@ def _select(ids: Sequence[str], order: Sequence[str], arr: np.ndarray
     idx = {v: i for i, v in enumerate(ids)}
     rows = [idx[o] for o in order]
     return arr[rows]
+
+
+def defense_noise(cfg: "VFLConfig", arr: np.ndarray, step: int,
+                  key: str) -> np.ndarray:
+    """Gaussian defense noise for one exchanged tensor
+    (``cfg.noise_sigma``; docs/privacy.md): zero-mean with standard
+    deviation ``noise_sigma * rms(arr)``, so the knob is a
+    signal-relative noise floor rather than an absolute scale the
+    caller would have to retune per protocol. Deterministic per
+    (cfg.seed, step, key) — reruns and restarted agents add the exact
+    same noise — and seeded via sha256, so streams for different
+    rounds/parties are independent. Callers only invoke this when
+    ``noise_sigma > 0``; at 0.0 no rng is ever constructed and the
+    exchange stays bit-identical to the un-noised path."""
+    rms = float(np.sqrt(np.mean(np.square(np.asarray(arr,
+                                                     np.float64)))))
+    if rms == 0.0:
+        rms = 1.0
+    digest = hashlib.sha256(
+        f"noise/{cfg.seed}/{step}/{key}".encode()).digest()
+    rng = np.random.default_rng(int.from_bytes(digest[:8], "big"))
+    return rng.normal(0.0, cfg.noise_sigma * rms,
+                      np.shape(arr)).astype(np.asarray(arr).dtype)
 
 
 # ---------------------------------------------------------------------------

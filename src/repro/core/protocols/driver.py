@@ -75,6 +75,60 @@ schema.message("ctrl/rejoin", {"step": Field("int64", 1)}, stepped=True,
                    "restored step) / master ack (its global step)")
 
 
+class ExchangeCapture:
+    """Driver-level exchange-capture hook (docs/privacy.md).
+
+    When ``cfg.capture_exchanges`` is on, the driver installs one of
+    these on its typed channel; the channel then calls :meth:`record`
+    for every message whose type is in ``names`` — on the send side
+    *before* compression/masking bookkeeping (``_prepare``) and on the
+    receive side *after* decompression and schema checks, i.e. exactly
+    the plaintext a wire adversary at that party observes. Off by
+    default: the tap is a ``capture is None`` check and capture-off
+    runs are trace-bit-identical to the seed fixtures (tested in
+    tests/test_capture_hook.py).
+
+    The captured rounds are exported through ``Driver.result()
+    ["capture"]`` as plain dicts (picklable across every VFLJob mode)
+    and consumed offline by :mod:`repro.attacks` — the label-inference
+    attacks never touch a live channel.
+    """
+
+    #: label-bearing exchanges plus the round announcements needed to
+    #: reconstruct batch rows offline (rows never cross the wire during
+    #: fit — they are re-derived from ``batch_order`` + (epoch, lo, hi))
+    DEFAULT_NAMES = ("ctrl/step", "splitnn/u", "splitnn/du",
+                     "logreg/grad")
+
+    def __init__(self, names: Optional[Sequence[str]] = None):
+        self.names = frozenset(names if names is not None
+                               else self.DEFAULT_NAMES)
+        self.records: List[Dict[str, Any]] = []
+
+    def record(self, direction: str, peer: str, name: str,
+               payload: Dict[str, np.ndarray]) -> None:
+        if name not in self.names:
+            return
+        self.records.append({
+            "dir": direction, "peer": peer, "name": name,
+            "payload": {k: np.array(v, copy=True)
+                        for k, v in payload.items()}})
+
+    def entries(self, name: Optional[str] = None,
+                peer: Optional[str] = None,
+                direction: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Captured records filtered by message type / peer / direction,
+        in arrival order (the order attacks align rounds by)."""
+        return [r for r in self.records
+                if (name is None or r["name"] == name)
+                and (peer is None or r["peer"] == peer)
+                and (direction is None or r["dir"] == direction)]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"names": sorted(self.names),
+                "records": list(self.records)}
+
+
 @dataclass
 class ElasticCfg:
     """Master-side elastic policy: which peers may crash and rejoin
@@ -474,6 +528,11 @@ class Driver:
         # member-side serve cache (cfg.serve_cache_rows); lazily built on
         # the first EVAL round a cache-capable protocol answers
         self._embed_cache: Optional[EmbedCache] = None
+        # adversarial exchange capture (docs/privacy.md): installed on
+        # the channel only when asked for — every other run keeps the
+        # channel's ``capture`` at None and pays one is-None check
+        if self.cfg.capture_exchanges:
+            self.ch.capture = ExchangeCapture()
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -544,6 +603,8 @@ class Driver:
                "phase_s": dict(self.phase_s)}
         if self._embed_cache is not None:
             out["embed_cache"] = self._embed_cache.as_dict()
+        if getattr(self.ch, "capture", None) is not None:
+            out["capture"] = self.ch.capture.as_dict()
         if self.role == "master":
             out["history"] = list(self.history)
             out["n_common"] = self.n

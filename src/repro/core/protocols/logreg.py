@@ -291,6 +291,13 @@ class LogRegHEProtocol(VFLProtocol):
                 flat = plains
             g = he.decode_fixed(flat, (len(flat),),
                                 scale_bits=2 * he.SCALE_BITS)
+            if self.cfg.noise_sigma > 0:
+                # noising defense (docs/privacy.md): the decrypted
+                # gradient is the label-bearing exchange here — the
+                # member reconstructs residual signs from it — so the
+                # key holder perturbs it before returning ownership
+                g = g + base.defense_noise(self.cfg, g, step,
+                                           f"{self.role}/{m}")
             ch.send(m, "logreg/grad", {"g": g})
             self.decrypted += n_cts
             self.values += len(flat)

@@ -168,6 +168,15 @@ class SplitNNProtocol(VFLProtocol):
         this forward actually saw)."""
         xb = self.x[rows]
         u = _member_fwd(self.params, xb)
+        if self.cfg.noise_sigma > 0:
+            # noising defense (docs/privacy.md): the member perturbs
+            # its outgoing embedding before any masking, so neither the
+            # master nor a wire adversary ever sees the clean
+            # activations an embedding-clustering attack feeds on
+            u = jnp.asarray(np.asarray(u)
+                            + base.defense_noise(self.cfg,
+                                                 np.asarray(u), step,
+                                                 self.role))
         if self.masker is not None:
             u = jnp.asarray(np.asarray(u)
                             + self.masker.mask(step, np.asarray(u).shape))

@@ -54,9 +54,21 @@ class PairwiseMasker:
                 hashlib.sha256(shared.to_bytes(96, "big")).digest()[:8],
                 "big")
 
+    # PRG masks live on a fixed dyadic grid: gaussians clipped to
+    # |z| <= 8 and rounded to multiples of 2^-10. Every grid value and
+    # every sum of a few thousand of them is exactly representable in
+    # float32 (magnitudes stay far below 2^23 ulp-1 territory), so the
+    # +/- streams of a pair cancel to exactly 0.0 in ANY summation
+    # order — the masked sum equals the plain sum bit-for-bit whenever
+    # the data itself sums exactly (tests/test_secure_agg_props.py).
+    # Clipping 8-sigma tails costs nothing statistically and is what
+    # bounds the sums into the exact range.
+    _GRID = np.float32(1024.0)
+
     def _prg(self, seed: int, rnd: int, shape) -> np.ndarray:
         rng = np.random.default_rng(np.uint64((seed + rnd) % 2**63))
-        return rng.standard_normal(shape).astype(np.float32)
+        z = rng.standard_normal(shape).astype(np.float32)
+        return np.round(np.clip(z, -8.0, 8.0) * self._GRID) / self._GRID
 
     def mask(self, rnd: int, shape) -> np.ndarray:
         m = np.zeros(shape, np.float32)

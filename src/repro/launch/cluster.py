@@ -202,7 +202,9 @@ class RestartPolicy:
 @dataclass
 class ChaosSpec:
     """Fault injection from the spec's ``[chaos]`` table: at global
-    step ``step`` on agent ``role``, run ``scenario`` —
+    step ``step`` on agent ``role`` (a name or a list of names — a
+    list injects the same fault on every named agent in the same
+    round, the *correlated* failure case), run ``scenario`` —
 
     * ``"crash"`` — raise inside the driver loop (the process dies;
       pair with ``[restart]`` to exercise the rejoin path),
@@ -211,13 +213,25 @@ class ChaosSpec:
     * ``"slow"`` — inflate the agent's outbound latency to
       ``latency_ms`` mid-run (the straggler scenario; pair with
       ``round_deadline_s`` at depth >= 2 to see stale substitution).
+
+    ``repeat=true`` re-arms the fault on every supervisor respawn —
+    the restarted agent resumes from a checkpoint at/past the chaos
+    step and crashes again immediately, the crash-loop that must end
+    in an attributed restart-budget exhaustion, not a hang.
     """
 
-    role: str
+    role: Union[str, List[str]]
     step: int
     scenario: str = "crash"            # "crash" | "partition" | "slow"
     latency_ms: float = 250.0          # "slow" link latency
     loss: float = 1.0                  # "partition" drop probability
+    repeat: bool = False               # re-arm on supervisor respawn
+
+    @property
+    def roles(self) -> List[str]:
+        """The fault's victims, normalized to a list."""
+        return [self.role] if isinstance(self.role, str) \
+            else list(self.role)
 
 
 @dataclass
@@ -334,9 +348,13 @@ class ClusterSpec:
                     "> 0 and/or stop_file (the service ends when the "
                     "window closes or the file appears)")
         if self.chaos is not None:
-            if self.chaos.role not in have:
-                raise ValueError(f"[chaos] role {self.chaos.role!r} is "
-                                 f"not an agent")
+            if not self.chaos.roles:
+                raise ValueError("[chaos] role must name at least one "
+                                 "agent")
+            for cr in self.chaos.roles:
+                if cr not in have:
+                    raise ValueError(f"[chaos] role {cr!r} is not an "
+                                     f"agent")
             if self.chaos.scenario not in ("crash", "partition", "slow"):
                 raise ValueError(
                     f"[chaos] unknown scenario {self.chaos.scenario!r} "
@@ -651,7 +669,7 @@ class _ChaosLink(Callback):
 
 def _chaos_callbacks(spec: ClusterSpec, role: str) -> List[Callback]:
     ch = spec.chaos
-    if ch is None or ch.role != role:
+    if ch is None or role not in ch.roles:
         return []
     if ch.scenario == "crash":
         return [_ChaosCrash(ch.step)]
@@ -712,10 +730,15 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
         comm = spec.make_communicator(role)
         status_q.put(("ready", role, os.getpid()))
         data = spec.build_data(role)
-        # a chaos fault is injected ONCE — the supervisor's respawn of
-        # the victim must not re-arm it (it would crash again instantly
-        # and burn the whole restart budget on one scripted fault)
-        callbacks = [] if rejoin else _chaos_callbacks(spec, role)
+        # a chaos fault is injected ONCE by default — the supervisor's
+        # respawn of the victim must not re-arm it (it would crash
+        # again instantly and burn the whole restart budget on one
+        # scripted fault). [chaos] repeat=true opts into exactly that
+        # burn: the crash-loop scenario that must end in an attributed
+        # restart-budget exhaustion rather than a hang.
+        rearm = spec.chaos is not None and spec.chaos.repeat
+        callbacks = _chaos_callbacks(spec, role) \
+            if (not rejoin or rearm) else []
         restartable = spec.restartable_roles()
         elastic = None
         resume_dir = None

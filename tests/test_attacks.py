@@ -1,0 +1,190 @@
+"""Adversarial harness unit tests: the label-inference attacks work
+where they must (undefended exchanges), the measured defenses actually
+defend, and the privacy CI gate holds on the committed matrix.
+
+The full-size measurement lives in ``repro.attacks.runner`` (CI's
+privacy job); these tests run shrunken cases so tier-1 stays fast.
+"""
+import dataclasses
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.attacks import label_inference as li
+from repro.attacks.harness import AttackHarness
+from repro.attacks.runner import logreg_case
+from repro.core.protocols import base
+from repro.core.protocols.driver import OP_END, OP_RUN
+from repro.train.evals import auc
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# offline attack math (no VFL run)
+# ---------------------------------------------------------------------------
+
+
+def test_run_rounds_rederives_batches():
+    """ctrl/step (op, epoch, lo, hi) records -> exact batch rows via
+    the shared deterministic batch_order; END steps are skipped."""
+    cfg = base.VFLConfig(seed=11)
+    n = 40
+
+    def rec(op, epoch, lo, hi):
+        return {"dir": "recv", "peer": "master", "name": "ctrl/step",
+                "payload": {"op": np.array([op]),
+                            "epoch": np.array([epoch]),
+                            "lo": np.array([lo]), "hi": np.array([hi])}}
+
+    cap = {"names": ["ctrl/step"],
+           "records": [rec(OP_RUN, 0, 0, 16), rec(OP_RUN, 0, 16, 32),
+                       rec(OP_RUN, 1, 0, 16), rec(OP_END, 0, 0, 0)]}
+    rounds = li.run_rounds(cap, cfg, n, peer="master",
+                           direction="recv")
+    assert len(rounds) == 3
+    np.testing.assert_array_equal(rounds[0],
+                                  base.batch_order(n, cfg, 0)[0:16])
+    np.testing.assert_array_equal(rounds[2],
+                                  base.batch_order(n, cfg, 1)[0:16])
+
+
+def test_gradient_direction_attack_exact_solve():
+    """batch <= member width: X_b^T r = g is determined, the residual
+    sign (negative iff y=1) is recovered outright -> AUC 1.0."""
+    rng = np.random.default_rng(0)
+    n, d = 48, 8
+    x = rng.normal(size=(n, d))
+    y = rng.integers(0, 2, n).astype(np.float64)
+    p = 1.0 / (1.0 + np.exp(-rng.normal(size=n)))
+    rounds, grads = [], []
+    for lo in range(0, n, 6):
+        rows = np.arange(lo, lo + 6)
+        r = (p[rows] - y[rows]) / len(rows)
+        rounds.append(rows)
+        grads.append(x[rows].T @ r)
+    scores = li.gradient_direction_attack(x, rounds, grads)
+    assert auc(scores, y) == 1.0
+
+
+def test_embedding_attacks_read_separable_embeddings():
+    """Synthetic linearly-separable 'activations': both the
+    unsupervised cluster attack and the aux-label probe recover the
+    labels from per-round mean embeddings."""
+    rng = np.random.default_rng(1)
+    n, d = 120, 8
+    y = rng.integers(0, 2, n).astype(np.float64)
+    centers = np.where(y[:, None] > 0, 1.0, -1.0)
+    u_true = centers * rng.uniform(0.5, 1.5, (n, d))
+    rounds = [rng.permutation(n)[:30] for _ in range(12)]
+    embeds = [u_true[r] + 0.3 * rng.normal(size=(len(r), d))
+              for r in rounds]
+    u_bar, seen = li.mean_embeddings(rounds, embeds, n, late_frac=0.5)
+    a = auc(li.cluster_attack(u_bar[seen]), y[seen])
+    assert max(a, 1.0 - a) > 0.9
+    aux = np.zeros(n, bool)
+    aux[rng.permutation(n)[:20]] = True
+    scores = li.probe_attack(u_bar[seen], y[seen], aux[seen])
+    hold = ~aux[seen]
+    assert auc(scores[hold], y[seen][hold]) > 0.9
+
+
+def test_defense_noise_deterministic_and_scaled():
+    """defense_noise is a pure function of (seed, step, key) with rms
+    scaling — reruns reproduce it exactly; distinct steps/keys do not."""
+    cfg = base.VFLConfig(noise_sigma=1.5, seed=3)
+    g = np.linspace(-2.0, 2.0, 64)
+    n1 = base.defense_noise(cfg, g, 7, "arbiter/member0")
+    n2 = base.defense_noise(cfg, g, 7, "arbiter/member0")
+    np.testing.assert_allclose(n1, n2, rtol=0, atol=0)
+    assert not np.array_equal(n1,
+                              base.defense_noise(cfg, g, 8,
+                                                 "arbiter/member0"))
+    assert not np.array_equal(n1,
+                              base.defense_noise(cfg, g, 7,
+                                                 "arbiter/member1"))
+    rms = float(np.sqrt(np.mean(g ** 2)))
+    assert 0.5 * 1.5 * rms < n1.std() < 2.0 * 1.5 * rms
+
+
+# ---------------------------------------------------------------------------
+# harness end-to-end (shrunken logreg case)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def logreg_reports():
+    cfg, master, members = logreg_case(n=96)
+    plain = AttackHarness(cfg, master, members,
+                          mode="thread").run().grad_attack()
+    noised = AttackHarness(
+        dataclasses.replace(cfg, noise_sigma=2.0), master, members,
+        mode="thread").run().grad_attack()
+    return plain, noised
+
+
+def test_undefended_logreg_leaks(logreg_reports):
+    plain, _ = logreg_reports
+    assert plain["attack"] == "grad_direction"
+    assert plain["adversary"] == "member0"
+    assert plain["rounds"] > 0
+    # exact solve regime: labels leak outright
+    assert plain["leakage_auc"] >= 0.75
+
+
+def test_noise_defense_breaks_the_attack(logreg_reports):
+    plain, noised = logreg_reports
+    assert noised["leakage_auc"] < 0.7
+    assert noised["leakage_auc"] < plain["leakage_auc"] - 0.2
+    # gradient-level noise is averaged out by SGD: utility survives
+    assert abs(noised["utility_auc"] - plain["utility_auc"]) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# CI gate on the committed matrix
+# ---------------------------------------------------------------------------
+
+
+def _load_check_regression():
+    path = REPO / "benchmarks" / "check_regression.py"
+    spec = importlib.util.spec_from_file_location("check_regression",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_committed_privacy_json_passes_the_gate():
+    """The checked-in privacy.json satisfies every PRIVACY_GATES cell —
+    the same check CI's privacy job runs on fresh rows."""
+    mod = _load_check_regression()
+    out = REPO / "benchmarks" / "results" / "privacy.json"
+    assert out.exists(), "benchmarks/results/privacy.json not committed"
+    assert mod.check_privacy(str(out)) == []
+
+
+def test_privacy_gate_flags_violations(tmp_path):
+    """A broken attack (undefended leakage at chance) and a broken
+    defense (leakage above threshold) must both fail the gate."""
+    mod = _load_check_regression()
+    rows = json.loads(
+        (REPO / "benchmarks" / "results" / "privacy.json").read_text())
+    bad = []
+    for r in rows:
+        r = dict(r)
+        if r["defense"] == "none":
+            r["leakage_auc"] = 0.5          # attack "stopped working"
+        if r["defense"] == "secure_agg":
+            r["leakage_auc"] = 0.9          # defense "stopped working"
+        bad.append(r)
+    p = tmp_path / "privacy.json"
+    p.write_text(json.dumps(bad))
+    failures = mod.check_privacy(str(p))
+    assert any("attack must work" in f for f in failures)
+    assert any("secure_agg" in f for f in failures)
+    # and a missing cell is itself a failure
+    p.write_text(json.dumps(bad[1:]))
+    assert any("missing" in f for f in mod.check_privacy(str(p)))

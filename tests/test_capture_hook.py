@@ -1,0 +1,135 @@
+"""Exchange-capture hook (cfg.capture_exchanges): the adversarial
+harness's tap must be measurement-grade — OFF it leaves no trace and
+the protocols reproduce the recorded seed fixtures bit-for-bit; ON it
+records what crossed the wire without perturbing a single loss value,
+at pipeline depth 1 and under async overlap (depth >= 2).
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.party import run_vfl
+from repro.core.protocols.base import VFLConfig
+from repro.core.protocols.driver import OP_RUN
+from repro.data.vertical import vertical_partition
+
+TRACES = json.loads(
+    (pathlib.Path(__file__).parent / "fixtures" / "seed_traces.json")
+    .read_text())
+
+
+def _dataset(n=192, d=12, items=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    w = rng.normal(size=(d, items))
+    y = x @ w * 0.4 + rng.normal(scale=0.05, size=(n, items))
+    ids = [f"u{i:05d}" for i in range(n)]
+    return ids, x, y
+
+
+def _logreg_case():
+    ids, x, y = _dataset(n=64, d=8, items=1)
+    yb = (y > 0).astype(np.float64)
+    master, members = vertical_partition(ids, x, yb, widths=[3], seed=4)
+    cfg = VFLConfig(protocol="logreg_he", epochs=1, batch_size=32,
+                    lr=0.5, seed=0, use_psi=False, he_bits=256)
+    return cfg, master, members
+
+
+def _splitnn_case():
+    ids, x, y = _dataset(n=128, d=12, items=3)
+    yb = (y > 0).astype(np.float64)
+    master, members = vertical_partition(ids, x, yb, widths=[5], seed=3)
+    cfg = VFLConfig(protocol="split_nn", epochs=3, batch_size=32,
+                    lr=0.1, seed=0, use_psi=False, embedding_dim=8,
+                    hidden=(16,))
+    return cfg, master, members
+
+
+def test_capture_off_is_seed_identical_and_exports_nothing():
+    """The default (capture off) run still reproduces the recorded
+    seed trace bit-for-bit and leaves no capture key in any result —
+    the hook is free when unused."""
+    cfg, master, members = _logreg_case()
+    assert cfg.capture_exchanges is False
+    res = run_vfl(cfg, master, members, mode="thread")
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["logreg_he"]["losses"], rtol=0, atol=0)
+    for role, r in res.items():
+        assert "capture" not in r, role
+
+
+def test_capture_on_logreg_bit_identical_to_trace():
+    """Capture ON: the f64 HE-logreg path must stay bit-identical to
+    the seed fixture — recording is observation, not intervention."""
+    cfg, master, members = _logreg_case()
+    cfg = dataclasses.replace(cfg, capture_exchanges=True)
+    res = run_vfl(cfg, master, members, mode="thread")
+    np.testing.assert_allclose(
+        [h["loss"] for h in res["master"]["history"]],
+        TRACES["logreg_he"]["losses"], rtol=0, atol=0)
+    np.testing.assert_allclose(res["master"]["w_master"],
+                               TRACES["logreg_he"]["w_master"],
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(res["member0"]["w"],
+                               TRACES["logreg_he"]["w_members"][0],
+                               rtol=0, atol=0)
+    # every role exported a capture dict
+    for role in ("master", "member0", "arbiter"):
+        assert "capture" in res[role], role
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_capture_on_does_not_perturb_splitnn(depth):
+    """Same split-NN run with and without capture: loss histories are
+    equal float-for-float, at depth 1 and under async overlap."""
+    cfg, master, members = _splitnn_case()
+    cfg = dataclasses.replace(cfg, pipeline_depth=depth)
+    plain = run_vfl(cfg, master, members, mode="thread")
+    tapped = run_vfl(dataclasses.replace(cfg, capture_exchanges=True),
+                     master, members, mode="thread")
+    np.testing.assert_allclose(
+        [h["loss"] for h in tapped["master"]["history"]],
+        [h["loss"] for h in plain["master"]["history"]],
+        rtol=0, atol=0)
+    if depth == 1:
+        np.testing.assert_allclose(
+            [h["loss"] for h in tapped["master"]["history"]],
+            TRACES["split_nn"]["losses"], rtol=1e-6)
+
+
+def test_capture_records_both_vantage_points():
+    """Record structure: the member's capture holds its received
+    ``ctrl/step`` announcements (op/epoch/lo/hi), the master's holds
+    each member's ``splitnn/u`` activations — the two vantage points
+    the label-inference attacks replay."""
+    cfg, master, members = _splitnn_case()
+    cfg = dataclasses.replace(cfg, capture_exchanges=True)
+    res = run_vfl(cfg, master, members, mode="thread")
+
+    mcap = res["member0"]["capture"]
+    steps = [r for r in mcap["records"] if r["name"] == "ctrl/step"
+             and r["dir"] == "recv" and r["peer"] == "master"]
+    assert steps, "member captured no step announcements"
+    runs = [r for r in steps
+            if int(np.asarray(r["payload"]["op"])[0]) == OP_RUN]
+    assert len(runs) == len(res["master"]["history"])
+    for r in runs:
+        lo = int(np.asarray(r["payload"]["lo"])[0])
+        hi = int(np.asarray(r["payload"]["hi"])[0])
+        assert 0 <= lo < hi <= 128
+
+    cap = res["master"]["capture"]
+    us = [r for r in cap["records"] if r["name"] == "splitnn/u"
+          and r["dir"] == "recv" and r["peer"] == "member0"]
+    assert len(us) == len(res["master"]["history"])
+    for r in us:
+        u = np.asarray(r["payload"]["u"])
+        assert u.ndim == 2 and u.shape[1] == cfg.embedding_dim
+    # payloads are defensive copies, not views of live buffers
+    u0 = us[0]["payload"]["u"]
+    assert isinstance(u0, np.ndarray) and u0.flags.owndata

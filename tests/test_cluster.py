@@ -140,6 +140,37 @@ def test_spec_validation_errors():
         bad2.validate()
 
 
+def test_chaos_spec_role_list_and_repeat():
+    """[chaos] role accepts a list (correlated faults) and repeat=true
+    (re-armed on respawn); every named role must be an agent."""
+    from repro.launch.cluster import _chaos_callbacks
+    spec = load_spec(_linreg_spec(
+        _free_ports(5),
+        chaos={"role": ["member0", "member1"], "step": 3,
+               "scenario": "crash", "repeat": True}))
+    spec.validate()
+    assert spec.chaos.roles == ["member0", "member1"]
+    assert spec.chaos.repeat is True
+    assert _chaos_callbacks(spec, "member0")
+    assert _chaos_callbacks(spec, "member1")
+    assert _chaos_callbacks(spec, "master") == []
+    # a single role string still normalizes and defaults repeat off
+    single = load_spec(_linreg_spec(_free_ports(5),
+                                    chaos={"role": "member0",
+                                           "step": 3}))
+    assert single.chaos.roles == ["member0"]
+    assert single.chaos.repeat is False
+    bad = load_spec(_linreg_spec(
+        _free_ports(5), chaos={"role": ["member0", "ghost"],
+                               "step": 3}))
+    with pytest.raises(ValueError, match="not an agent"):
+        bad.validate()
+    with pytest.raises(ValueError, match=r"\[chaos\] unknown keys"):
+        load_spec(_linreg_spec(_free_ports(5),
+                               chaos={"role": "member0", "step": 1,
+                                      "nope": True}))
+
+
 # ---------------------------------------------------------------------------
 # VFLJob.from_spec: run a deployment spec in-process
 # ---------------------------------------------------------------------------
@@ -198,6 +229,26 @@ def test_member_crash_fails_both_launchers_with_traceback(
     err = capfd.readouterr().err
     assert "chaos: injected crash at step 5" in err
     assert "member1" in err
+    assert not (tmp_path / "alpha" / "summary.json").exists()
+
+
+def test_correlated_member_crashes_fail_both_launchers(
+        tmp_path, capfd):
+    """Both members crash in the same round (a [chaos] role list):
+    each host sees a local death at once, and both launchers must
+    still exit non-zero attributed — two simultaneous failure
+    broadcasts racing on the control channel must not wedge either
+    supervision loop."""
+    spec = load_spec(_linreg_spec(
+        _free_ports(5), epochs=100,
+        chaos={"role": ["member0", "member1"], "step": 5}))
+    t0 = time.monotonic()
+    codes = _run_pair(spec, tmp_path)
+    dt = time.monotonic() - t0
+    assert codes == {"alpha": 1, "beta": 1}
+    assert dt < 60.0
+    err = capfd.readouterr().err
+    assert "chaos: injected crash at step 5" in err
     assert not (tmp_path / "alpha" / "summary.json").exists()
 
 
