@@ -81,6 +81,7 @@ REQUIRED = {
     "comm_isend_encode_inline", "comm_isend_encode_offload",
     "vfl_rejoin_recovery_s",
     "vfl_serve_qps", "vfl_serve_p99_ms",
+    "vfl_tower_splitnn_d1", "vfl_tower_splitnn_d2",
 }
 
 

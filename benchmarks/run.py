@@ -844,6 +844,10 @@ def main() -> None:
     # member embed cache) — rows vfl_serve_*; lives in its own module
     from benchmarks.bench_serve import bench_serve
     bench_serve(emit, args.quick)
+    # transformer-tower split-NN + per-step roofline split — rows
+    # vfl_tower_*; lives in its own module
+    from benchmarks.bench_tower import bench_tower
+    bench_tower(emit, args.quick)
     bench_roofline()
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "bench.csv").write_text(

@@ -173,6 +173,19 @@ class CommCfg:
     closes and must still be detected within milliseconds. Only
     meaningful when the master does no receives after its shutdown
     broadcast (our drivers' discipline).
+    ``peer_overrides``: optional per-edge settings, keyed by peer agent
+    id — the cluster spec's ``[comm.master.member0]`` tables resolve
+    here (``ClusterSpec.comm_for``). Only the **edge-scoped** fields of
+    an override are honored: ``link`` (each overridden peer gets its
+    own emulated uplink with an independent bandwidth clock) and
+    ``timeout`` (bounds blocking sends to and receives from that
+    peer). Connection-level fields (``tls``, ``nodelay``,
+    ``encode_offload``, ``strict_eof``) stay world-level — a socket is
+    configured before the engine knows which VFL edge it serves — and
+    the spec validator rejects them per-edge. Peers without an entry
+    use the flat world-level settings, including runtime
+    :meth:`PartyCommunicator.set_link` swaps (an override pins its
+    edge: chaos-scripted ``set_link`` does not touch it).
 
     Example::
 
@@ -190,6 +203,7 @@ class CommCfg:
     encode_offload: bool = True
     tls: Optional[TLSSpec] = None
     strict_eof: bool = False
+    peer_overrides: Optional[Dict[str, "CommCfg"]] = None
 
 
 @dataclass
@@ -382,11 +396,27 @@ class PartyCommunicator(abc.ABC):
         self._link = self.cfg.link
         if self._link is not None and self._link == LinkSpec():
             self._link = None            # all-zero spec: no shaping
-        # link-shaping clock (sender thread only): time the last byte
-        # of the previous message entered the emulated link, and the
-        # latest delivery stamp handed out (enforces FIFO under jitter)
-        self._link_busy = 0.0
-        self._link_last = 0.0
+        # per-edge overrides (CommCfg.peer_overrides): each overridden
+        # peer gets its own link spec + timeout; everyone else rides
+        # the world-level defaults above
+        self._peer_links: Dict[str, Optional[LinkSpec]] = {}
+        self._peer_timeouts: Dict[str, float] = {}
+        for peer, ov in (self.cfg.peer_overrides or {}).items():
+            plink = ov.link
+            if plink is not None and plink == LinkSpec():
+                plink = None
+            self._peer_links[peer] = plink
+            if ov.timeout is not None:
+                self._peer_timeouts[peer] = ov.timeout
+        # link-shaping clocks (sender thread only), one per uplink:
+        # time the last byte of the previous message entered the
+        # emulated link, and the latest delivery stamp handed out
+        # (enforces FIFO under jitter). Default-link peers share the
+        # "*" clock (one uplink serializes them, the PR 4 semantics);
+        # an overridden edge is its own physical link with its own
+        # bandwidth clock.
+        self._link_busy: Dict[str, float] = {}
+        self._link_last: Dict[str, float] = {}
         # stable per-agent seed (hash() is salted per interpreter — a
         # spawned agent process would jitter differently every run)
         self._link_rng = random.Random(zlib.crc32(me.encode()))
@@ -431,21 +461,35 @@ class PartyCommunicator(abc.ABC):
         return self._recv_any(frm, (tag,), timeout)
 
     # -- sender engine -------------------------------------------------------
-    def _shape_delay(self, t_enq: float, nbytes: int) -> None:
+    def _link_for(self, to: str) -> Optional[LinkSpec]:
+        """The emulated link shaping sends to ``to``: the per-edge
+        override when one exists, else the world-level link."""
+        if to in self._peer_links:
+            return self._peer_links[to]
+        return self._link
+
+    def _timeout_for(self, to: str) -> float:
+        return self._peer_timeouts.get(to, self._timeout)
+
+    def _shape_delay(self, t_enq: float, nbytes: int,
+                     link: LinkSpec, ckey: str) -> None:
         """Sleep (sender thread, no locks held) until the emulated link
         would deliver this message. Bandwidth serializes on a virtual
         clock keyed to *enqueue* time, so latency overlaps across
         in-flight messages like real propagation delay; the delivery
-        stamp is monotonic so jitter never reorders the FIFO."""
-        link = self._link
+        stamp is monotonic so jitter never reorders the FIFO. ``ckey``
+        names the uplink clock: "*" for the shared default link, the
+        peer id for a per-edge override (its own physical link)."""
         tx = nbytes * 8.0 / (link.bandwidth_mbps * 1e6) \
             if link.bandwidth_mbps else 0.0
-        self._link_busy = max(self._link_busy, t_enq) + tx
+        busy = max(self._link_busy.get(ckey, 0.0), t_enq) + tx
+        self._link_busy[ckey] = busy
         extra = self._link_rng.uniform(0.0, link.jitter_ms) * 1e-3 \
             if link.jitter_ms else 0.0
-        deliver = self._link_busy + link.latency_ms * 1e-3 + extra
-        self._link_last = max(self._link_last, deliver)
-        dt = self._link_last - time.perf_counter()
+        deliver = busy + link.latency_ms * 1e-3 + extra
+        last = max(self._link_last.get(ckey, 0.0), deliver)
+        self._link_last[ckey] = last
+        dt = last - time.perf_counter()
         if dt > 0:
             time.sleep(dt)
 
@@ -479,7 +523,7 @@ class PartyCommunicator(abc.ABC):
                 with self._send_lock:
                     self._finish_item(item, e)
                 continue
-            link = self._link
+            link = self._link_for(to)
             if link is not None:
                 if link.loss and self._link_rng.random() < link.loss:
                     # blackholed: the sender side believes the write
@@ -488,7 +532,8 @@ class PartyCommunicator(abc.ABC):
                         self.stats.link_dropped += 1
                         self._finish_item(item, None)
                     continue
-                self._shape_delay(item.t_enq, len(raw))
+                ckey = to if to in self._peer_links else "*"
+                self._shape_delay(item.t_enq, len(raw), link, ckey)
             with self._send_lock:
                 err = self._send_errs.get(to)
                 if err is not None:
@@ -593,7 +638,7 @@ class PartyCommunicator(abc.ABC):
         on the caller thread — no thread handoff."""
         self._raise_pending_send_error(to)
         t0 = time.perf_counter()
-        if self._link is None:
+        if self._link_for(to) is None:
             msg, raw = self._make(to, tag, payload, meta)
             with self._send_lock:
                 if self._submitted == self._completed:
@@ -615,7 +660,7 @@ class PartyCommunicator(abc.ABC):
             msg, raw = self._make(to, tag, payload, meta)
         # async sends outstanding (or link shaping): join the FIFO
         fut = self._enqueue(msg, raw, t0)
-        fut.result(self._timeout)
+        fut.result(self._timeout_for(to))
 
     def flush_sends(self, timeout: Optional[float] = None) -> None:
         """Block until every queued send hit the wire."""
@@ -632,7 +677,9 @@ class PartyCommunicator(abc.ABC):
         mid-run toggle (``partition`` = ``LinkSpec(loss=1.0)``,
         ``slow`` = inflated latency). Subsequent sends route through
         the sender thread and see the new link; a message racing the
-        swap may be shaped under either spec (benign)."""
+        swap may be shaped under either spec (benign). Swaps the
+        *default* link only: edges pinned by
+        ``CommCfg.peer_overrides`` keep their own spec."""
         if link is not None and link == LinkSpec():
             link = None                  # all-zero spec: no shaping
         self._link = link
@@ -664,6 +711,8 @@ class PartyCommunicator(abc.ABC):
 
     def recv(self, frm: str, tag: str,
              timeout: Optional[float] = None) -> Message:
+        if timeout is None and frm in self._peer_timeouts:
+            timeout = self._peer_timeouts[frm]
         t0 = time.perf_counter()
         msg = self._recv(frm, tag, timeout)
         self.stats.record_recv(time.perf_counter() - t0)
@@ -673,6 +722,8 @@ class PartyCommunicator(abc.ABC):
                  timeout: Optional[float] = None) -> Message:
         """Blocking wait for the first message from ``frm`` carrying any
         of ``tags`` (stream-aware receives: data or a coalesced frame)."""
+        if timeout is None and frm in self._peer_timeouts:
+            timeout = self._peer_timeouts[frm]
         t0 = time.perf_counter()
         msg = self._recv_any(frm, tuple(tags), timeout)
         self.stats.record_recv(time.perf_counter() - t0)

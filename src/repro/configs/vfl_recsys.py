@@ -26,10 +26,33 @@ class VFLRecsysConfig:
     # fraction of master users present in each member silo (ID overlap)
     id_overlap: float = 0.6
     member_features: Tuple[int, ...] = (381,)   # MegaMarket-like silo width
-    # split-NN dims
+    # split-NN dims — DEPRECATED: these layer-width tuples predate the
+    # TowerSpec model factory (repro.models.tower, DESIGN.md §12). They
+    # keep working through bottom_tower()/top_tower() below, which map
+    # them onto an equivalent one-block MLP tower (warns once).
     bottom_dims: Tuple[int, ...] = (256, 128)
     top_dims: Tuple[int, ...] = (128, 64)
     embedding_dim: int = 128
+
+    def bottom_tower(self, in_dim: int):
+        """Deprecated ``bottom_dims`` as an equivalent MLP
+        :class:`~repro.models.tower.TowerSpec` mapping ``in_dim``
+        features to ``embedding_dim`` (bit-identical params/math to
+        the legacy ``mlp_init``/``mlp_apply`` path)."""
+        from repro.models.tower import legacy_dims_tower
+        return legacy_dims_tower(
+            (int(in_dim),) + tuple(self.bottom_dims[:-1])
+            + (self.embedding_dim,), final_act=True)
+
+    def top_tower(self):
+        """Deprecated ``top_dims`` as an equivalent MLP
+        :class:`~repro.models.tower.TowerSpec` mapping the summed
+        ``embedding_dim`` to ``n_items`` logits (no final activation,
+        as the legacy top model)."""
+        from repro.models.tower import legacy_dims_tower
+        return legacy_dims_tower(
+            (self.embedding_dim,) + tuple(self.top_dims)
+            + (self.n_items,), final_act=False)
 
     def reduced(self) -> "VFLRecsysConfig":
         """CI-sized variant for smoke tests."""

@@ -301,7 +301,8 @@ class VFLJob:
                  resume_dir: Optional[str] = None,
                  pipeline_depth: Optional[int] = None,
                  comm_timeout: Optional[float] = None,
-                 comm_cfg: Optional[CommCfg] = None):
+                 comm_cfg: Optional[CommCfg] = None,
+                 comm_cfgs: Optional[Dict[str, CommCfg]] = None):
         """``pipeline_depth`` overrides ``cfg.pipeline_depth`` (1 =
         synchronous lock-step, D >= 2 = bounded-staleness pipelining);
         ``comm_timeout`` overrides each transport's per-message wait;
@@ -311,6 +312,14 @@ class VFLJob:
 
             wan = CommCfg(link=LinkSpec(latency_ms=20))
             VFLJob(cfg, master, members, mode="grpc", comm_cfg=wan)
+
+        ``comm_cfgs`` overrides ``comm_cfg`` per role (keyed by agent
+        id) — how per-link edge settings reach each agent's transport:
+        ``ClusterSpec.comm_for(role)`` resolves a spec's
+        ``[comm.a.b]`` tables into per-role cfgs whose
+        ``peer_overrides`` shape just the named edges, and
+        :meth:`from_spec` passes them here. Roles without an entry
+        fall back to ``comm_cfg``.
         """
         import dataclasses
         if pipeline_depth is not None:
@@ -318,6 +327,15 @@ class VFLJob:
         if comm_timeout is not None:
             comm_cfg = dataclasses.replace(comm_cfg or CommCfg(),
                                            timeout=comm_timeout)
+            if comm_cfgs is not None:
+                comm_cfgs = {w: dataclasses.replace(
+                    c, timeout=comm_timeout)
+                    for w, c in comm_cfgs.items()}
+
+        def _cfg_for(w: str) -> Optional[CommCfg]:
+            if comm_cfgs is not None and w in comm_cfgs:
+                return comm_cfgs[w]
+            return comm_cfg
         self.cfg = cfg
         self.mode = mode
         self.world = world_for(cfg, len(member_datas))
@@ -338,16 +356,19 @@ class VFLJob:
         if mode in ("thread", "socket", "grpc"):
             self._cmd_q: Any = queue.Queue()
             self._res_q: Any = queue.Queue()
-            ckw = {} if comm_cfg is None else {"comm_cfg": comm_cfg}
+            def _ckw(w: str) -> Dict[str, Any]:
+                c = _cfg_for(w)
+                return {} if c is None else {"comm_cfg": c}
             if mode == "thread":
                 bus = ThreadBus(self.world)
-                comms = {w: bus.communicator(w, **ckw)
+                comms = {w: bus.communicator(w, **_ckw(w))
                          for w in self.world}
             else:
                 tcls = SocketCommunicator if mode == "socket" \
                     else GrpcCommunicator
                 addrs = local_addresses(self.world)
-                comms = {w: tcls(w, addrs, **ckw) for w in self.world}
+                comms = {w: tcls(w, addrs, **_ckw(w))
+                         for w in self.world}
             for w in self.world:
                 is_m = w == "master"
                 t = threading.Thread(
@@ -386,7 +407,7 @@ class VFLJob:
                           self._q, list(callbacks), resume_dir,
                           self._cmd_q if is_m else None,
                           self._res_q if is_m else None,
-                          comm_cfg))
+                          _cfg_for(w)))
                 # daemonized: an abandoned job (no shutdown) must not
                 # block interpreter exit on multiprocessing's atexit join
                 p.daemon = True
@@ -428,6 +449,11 @@ class VFLJob:
         if mode is None:
             mode = "socket" if spec.framing == "sock" else "grpc"
         kw.setdefault("comm_cfg", spec.comm)
+        if spec.comm_edges:
+            # per-link [comm.a.b] overrides: each role's transport gets
+            # its own resolved cfg (peer_overrides on the named edges)
+            kw.setdefault("comm_cfgs",
+                          {r: spec.comm_for(r) for r in spec.world()})
         return cls(spec.cfg, datas["master"], members, mode=mode, **kw)
 
     # -- phase API -----------------------------------------------------------

@@ -104,6 +104,20 @@ class VFLConfig:
     # the tap is a ``None`` check on the hot path and capture-off runs
     # are trace-bit-identical to the seed fixtures (tested).
     capture_exchanges: bool = False
+    # composable member tower (DESIGN.md §12, repro.models.tower): a
+    # tuple of block configs ("embed:tokens=8,dim=32", "attn_block:
+    # heads=4", "mlp:hidden=64") resolved by the tower factory into the
+    # member bottom model. Empty = the legacy one-block MLP tower built
+    # from ``hidden``/``embedding_dim`` (bit-identical to seed traces).
+    tower: Tuple[str, ...] = ()
+    # master-side tower: bottom half uses ``tower``/``hidden`` like a
+    # member; this configures the top model over the summed embeddings.
+    # Empty = the legacy MLP from ``hidden``.
+    top_tower: Tuple[str, ...] = ()
+    # model-parallel sharding of the member tower over N local devices
+    # (launch/mesh.py x sharding/rules.py). 1 = unsharded single-device
+    # params (the default; no mesh is ever constructed).
+    tower_shard: int = 1
 
 
 @dataclass

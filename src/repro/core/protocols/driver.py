@@ -303,6 +303,16 @@ class VFLProtocol:
     def load_state_dict(self, state: Dict[str, Any]) -> None:
         pass
 
+    # -- roofline hook -------------------------------------------------------
+    def roofline_profile(self) -> Optional[Dict[str, float]]:
+        """Analytic per-step cost of this role's model, or ``None``
+        when the protocol doesn't account itself. Keys (all optional):
+        ``flops_per_step`` (training FLOPs for one round),
+        ``bytes_per_step`` (wire bytes this role exchanges per round),
+        ``params_bytes``. Merged into ``Driver.result()["roofline"]``
+        next to the measured compute/wire split (launch/roofline.py)."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # callbacks
@@ -528,11 +538,33 @@ class Driver:
         # member-side serve cache (cfg.serve_cache_rows); lazily built on
         # the first EVAL round a cache-capable protocol answers
         self._embed_cache: Optional[EmbedCache] = None
+        # per-step roofline accounting (launch/roofline.py): fit phases
+        # accumulate wall/steps plus CommStats counter deltas here, and
+        # result() resolves them into the compute-vs-wire split
+        self._fit_acc: Dict[str, float] = {"wall_s": 0.0, "steps": 0}
         # adversarial exchange capture (docs/privacy.md): installed on
         # the channel only when asked for — every other run keeps the
         # channel's ``capture`` at None and pays one is-None check
         if self.cfg.capture_exchanges:
             self.ch.capture = ExchangeCapture()
+
+    _ROOF_COUNTERS = ("recv_wait_s", "send_s", "queued_s", "wire_s",
+                      "sent_bytes")
+
+    def _roof_snap(self) -> Dict[str, float]:
+        s = self.ch.stats
+        return {k: float(getattr(s, k)) for k in self._ROOF_COUNTERS}
+
+    def _roof_record(self, t0: float, snap: Dict[str, float],
+                     step0: int) -> None:
+        """Fold one fit phase's wall/steps/comm deltas into the
+        roofline accumulator (phases add up across refits)."""
+        acc = self._fit_acc
+        acc["wall_s"] += time.perf_counter() - t0
+        acc["steps"] += self.global_step - step0
+        now = self._roof_snap()
+        for k in self._ROOF_COUNTERS:
+            acc[k] = acc.get(k, 0.0) + now[k] - snap[k]
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -605,6 +637,11 @@ class Driver:
             out["embed_cache"] = self._embed_cache.as_dict()
         if getattr(self.ch, "capture", None) is not None:
             out["capture"] = self.ch.capture.as_dict()
+        if self._fit_acc["steps"] > 0:
+            from repro.launch.roofline import step_account
+            out["roofline"] = step_account(
+                self._fit_acc["wall_s"], int(self._fit_acc["steps"]),
+                self._fit_acc, self.proto.roofline_profile())
         if self.role == "master":
             out["history"] = list(self.history)
             out["n_common"] = self.n
@@ -633,6 +670,7 @@ class Driver:
         """
         assert self.role == "master"
         t0 = time.perf_counter()
+        roof_snap, roof_step0 = self._roof_snap(), self.global_step
         cfg = self.cfg
         epochs = cfg.epochs if epochs is None else epochs
         # protocols without stage hooks run their members synchronously;
@@ -724,6 +762,7 @@ class Driver:
                           targets=self._others)
         self.stopped = self._stop
         self._invoke("on_fit_end")
+        self._roof_record(t0, roof_snap, roof_step0)
         self._timed("fit", t0)
         out = {"history": list(self.history), "n_common": self.n,
                "stopped": self.stopped,
@@ -887,7 +926,10 @@ class Driver:
                     # bottom model is about to change
                     self._embed_cache.invalidate()
                 self._invoke("on_fit_start")
+                roof_snap, roof_step0 = self._roof_snap(), \
+                    self.global_step
                 self._follow_steps()
+                self._roof_record(t0, roof_snap, roof_step0)
                 self._invoke("on_fit_end")
                 self._timed("fit", t0)
             elif op == PHASE_PREDICT:
@@ -921,7 +963,9 @@ class Driver:
         t0 = time.perf_counter()
         self.ch.stats.phase = "fit"
         self._invoke("on_fit_start")
+        roof_snap, roof_step0 = self._roof_snap(), self.global_step
         self._follow_steps()
+        self._roof_record(t0, roof_snap, roof_step0)
         self._invoke("on_fit_end")
         self._timed("fit", t0)
         return self.follow(idle_timeout)

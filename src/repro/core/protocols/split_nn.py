@@ -2,8 +2,8 @@
 algorithms enabled with a split-learning approach"), on the lifecycle
 API.
 
-Members own bottom MLPs over their feature slices; the master owns the
-top model and labels. Per batch:
+Members own bottom towers over their feature slices; the master owns
+the top model and labels. Per batch:
 
 1. members send bottom activations u_p = f_p(X_p),
 2. master sums aggregated embedding u = u_master + sum_p u_p, runs the
@@ -12,12 +12,18 @@ top model and labels. Per batch:
    signal that crosses the boundary),
 4. members apply their bottom VJP locally.
 
+Models are built by the composable tower factory
+(``repro.models.tower``, DESIGN.md §12): ``cfg.tower`` names the
+member/bottom block chain (embedding table + transformer blocks on the
+pallas kernels, quantize taps, MLP head) and ``cfg.top_tower`` the
+master top model; both default to the legacy one-block MLP derived from
+``cfg.hidden``/``cfg.embedding_dim``, which is bit-identical to the
+recorded seed traces (same param init stream, same math). Large member
+towers shard over local devices via ``cfg.tower_shard``.
+
 Predict is the forward half federated end-to-end: members answer
 feature-slice queries with bottom activations, the master composes the
 top model — nobody ever holds another silo's features or parameters.
-
-Everything is jax (jit'd per party), so the same protocol code is also
-what the mesh-mode VFL step shards over pods (core/vfl_step.py).
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ from repro.comm import schema
 from repro.comm.schema import Field
 from repro.core.protocols import base
 from repro.core.protocols.driver import VFLProtocol
+from repro.models import tower as twr
 
 # activation/gradient exchanges declare compress=True: when the channel
 # is built with compression on (cfg.compress), payloads ride as int8 +
@@ -49,6 +56,9 @@ schema.message("splitnn/pred_u", {"u": Field("float32", 2)}, stepped=True,
 
 
 def mlp_init(key, dims: Tuple[int, ...]) -> List[Dict[str, jax.Array]]:
+    """Legacy MLP primitive — the tower factory's ``mlp`` block
+    reproduces this init stream exactly (kept public: mesh-mode
+    ``core/vfl_step.py`` and tests build raw MLPs with it)."""
     layers = []
     for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
         k = jax.random.fold_in(key, i)
@@ -72,35 +82,58 @@ def _bce(logits, y):
                     + jnp.log1p(jnp.exp(-jnp.abs(logits))))
 
 
-@functools.partial(jax.jit, static_argnames=())
-def _master_fwd_bwd(top_params, bottom_params, u_members, x_m, y, lr):
-    """Returns (loss, new_top, new_bottom, du_members)."""
-    def fwd(top, bottom, u_ms):
-        u = mlp_apply(bottom, x_m, final_act=True)
-        for um in u_ms:
-            u = u + um
-        logits = mlp_apply(top, u)
-        return _bce(logits, y)
-
-    loss, grads = jax.value_and_grad(fwd, argnums=(0, 1, 2))(
-        top_params, bottom_params, u_members)
-    g_top, g_bottom, g_u = grads
-    new_top = jax.tree.map(lambda p, g: p - lr * g, top_params, g_top)
-    new_bottom = jax.tree.map(lambda p, g: p - lr * g, bottom_params,
-                              g_bottom)
-    return loss, new_top, new_bottom, g_u
+def bottom_spec(cfg, in_dim: int) -> twr.TowerSpec:
+    """Resolve the bottom-model tower for one party's feature width."""
+    if cfg.tower:
+        return twr.resolve(tuple(cfg.tower), in_dim, cfg.embedding_dim)
+    return twr.mlp_tower(in_dim, cfg.hidden, cfg.embedding_dim,
+                         final_act=True)
 
 
-@jax.jit
-def _member_fwd(params, x):
-    return mlp_apply(params, x, final_act=True)
+def top_spec(cfg, items: int) -> twr.TowerSpec:
+    """Resolve the master's top-model tower (embeddings -> logits)."""
+    if cfg.top_tower:
+        return twr.resolve(tuple(cfg.top_tower), cfg.embedding_dim,
+                           items)
+    return twr.mlp_tower(cfg.embedding_dim, cfg.hidden, items,
+                         final_act=False)
 
 
-@jax.jit
-def _member_bwd(params, x, du, lr):
-    _, vjp = jax.vjp(lambda p: mlp_apply(p, x, final_act=True), params)
-    (g,) = vjp(du)
-    return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+def _make_master_step(bspec: twr.TowerSpec, tspec: twr.TowerSpec):
+    @jax.jit
+    def step(top_params, bottom_params, u_members, x_m, y, lr):
+        """Returns (loss, new_top, new_bottom, du_members)."""
+        def fwd(top, bottom, u_ms):
+            u = twr.apply(bspec, bottom, x_m)
+            for um in u_ms:
+                u = u + um
+            logits = twr.apply(tspec, top, u)
+            return _bce(logits, y)
+
+        loss, grads = jax.value_and_grad(fwd, argnums=(0, 1, 2))(
+            top_params, bottom_params, u_members)
+        g_top, g_bottom, g_u = grads
+        new_top = jax.tree.map(lambda p, g: p - lr * g, top_params,
+                               g_top)
+        new_bottom = jax.tree.map(lambda p, g: p - lr * g,
+                                  bottom_params, g_bottom)
+        return loss, new_top, new_bottom, g_u
+    return step
+
+
+def _make_member_fns(spec: twr.TowerSpec, rules):
+    @jax.jit
+    def fwd(params, x):
+        return twr.apply(spec, params, x, rules=rules)
+
+    @jax.jit
+    def bwd(params, x, du, lr):
+        _, vjp = jax.vjp(
+            lambda p: twr.apply(spec, p, x, rules=rules), params)
+        (g,) = vjp(du)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+    return fwd, bwd
 
 
 @base.register
@@ -117,20 +150,33 @@ class SplitNNProtocol(VFLProtocol):
                 base._select(d.ids, self.order, d.y), jnp.float32)
             self.x = jnp.asarray(
                 base._select(d.ids, self.order, d.x), jnp.float32)
-            e = cfg.embedding_dim
             items = self.y.shape[1]
-            self.bottom = mlp_init(jax.random.fold_in(key, 0),
-                                   (self.x.shape[1],) + cfg.hidden + (e,))
-            self.top = mlp_init(jax.random.fold_in(key, 1),
-                                (e,) + cfg.hidden + (items,))
+            self._bspec = bottom_spec(cfg, self.x.shape[1])
+            self._tspec = top_spec(cfg, items)
+            self.bottom = twr.init(self._bspec,
+                                   jax.random.fold_in(key, 0))
+            self.top = twr.init(self._tspec, jax.random.fold_in(key, 1))
+            self._step = _make_master_step(self._bspec, self._tspec)
+            # the master's own bottom forward for predict (unsharded:
+            # the master bottom is the small party-side slice)
+            self._fwd, _ = _make_member_fns(self._bspec, None)
+            self._top_fwd = jax.jit(functools.partial(twr.apply,
+                                                      self._tspec))
         else:
             self.x = jnp.asarray(
                 base._select(d.ids, self.order, d.x), jnp.float32)
             # member index determines its init stream (from its id)
             midx = int(self.role.replace("member", "")) + 2
-            self.params = mlp_init(
-                jax.random.fold_in(key, midx),
-                (self.x.shape[1],) + cfg.hidden + (cfg.embedding_dim,))
+            self._spec = bottom_spec(cfg, self.x.shape[1])
+            self.params = twr.init(self._spec,
+                                   jax.random.fold_in(key, midx))
+            # model-parallel placement of a large member tower over the
+            # local mesh; rules=None (the default) never builds a mesh
+            self._rules = twr.make_tower_rules(cfg.tower_shard)
+            self.params = twr.shard_tower(self.params, self._spec,
+                                          self._rules)
+            self._fwd, self._bwd = _make_member_fns(self._spec,
+                                                    self._rules)
             self.masker = None
             # mask-stream namespace for predict queries: every member
             # sees the same EVAL round sequence, so a shared counter
@@ -145,6 +191,27 @@ class SplitNNProtocol(VFLProtocol):
                 self.masker = PairwiseMasker(self.ch.comm, self.role,
                                              self.ch.members)
 
+    def roofline_profile(self) -> Dict[str, float]:
+        """Analytic per-step cost for the roofline accounting
+        (launch/roofline.py): training FLOPs ~= 3x the forward pass
+        (fwd + input/weight VJPs), wire bytes = the float32 u/du
+        exchange this role sees each round."""
+        cfg = self.cfg
+        nb = cfg.batch_size
+        ubytes = nb * cfg.embedding_dim * 4
+        if self.is_master:
+            flops = 3.0 * (twr.tower_flops(self._bspec, nb)
+                           + twr.tower_flops(self._tspec, nb))
+            wire = 2 * ubytes * max(1, len(self.ch.members))
+            pbytes = twr.params_bytes(self.bottom) \
+                + twr.params_bytes(self.top)
+        else:
+            flops = 3.0 * twr.tower_flops(self._spec, nb)
+            wire = 2 * ubytes
+            pbytes = twr.params_bytes(self.params)
+        return {"flops_per_step": flops, "bytes_per_step": float(wire),
+                "params_bytes": float(pbytes)}
+
     def on_batch_master(self, rows, step) -> float:
         ch = self.ch
         msgs = ch.gather(ch.members, "splitnn/u")
@@ -153,7 +220,7 @@ class SplitNNProtocol(VFLProtocol):
         u_members = tuple(
             jnp.asarray(base.fit_rows(m.tensor("u"), len(rows)),
                         jnp.float32) for m in msgs)
-        loss, self.top, self.bottom, g_u = _master_fwd_bwd(
+        loss, self.top, self.bottom, g_u = self._step(
             self.top, self.bottom, u_members, self.x[rows], self.y[rows],
             self.lr)
         for mname, du in zip(ch.members, g_u):
@@ -167,7 +234,7 @@ class SplitNNProtocol(VFLProtocol):
         the deferred backward stage reuses (its VJP must see the inputs
         this forward actually saw)."""
         xb = self.x[rows]
-        u = _member_fwd(self.params, xb)
+        u = self._fwd(self.params, xb)
         if self.cfg.noise_sigma > 0:
             # noising defense (docs/privacy.md): the member perturbs
             # its outgoing embedding before any masking, so neither the
@@ -186,14 +253,14 @@ class SplitNNProtocol(VFLProtocol):
     def member_stage_recv(self, rows, step, xb) -> None:
         du = jnp.asarray(
             self.ch.recv("master", "splitnn/du").tensor("du"), jnp.float32)
-        self.params = _member_bwd(self.params, xb, du, self.lr)
+        self.params = self._bwd(self.params, xb, du, self.lr)
 
     # -- predict/serve -------------------------------------------------------
     def predict_master(self, rows) -> np.ndarray:
-        u = _member_fwd(self.bottom, self.x[rows])
+        u = self._fwd(self.bottom, self.x[rows])
         for msg in self.ch.gather(self.ch.members, "splitnn/pred_u"):
             u = u + jnp.asarray(msg.tensor("u"), jnp.float32)
-        return np.asarray(mlp_apply(self.top, u))
+        return np.asarray(self._top_fwd(self.top, u))
 
     def predict_member(self, rows) -> None:
         self.send_embed(self.predict_embed(rows), rows)
@@ -201,7 +268,7 @@ class SplitNNProtocol(VFLProtocol):
     def predict_embed(self, rows) -> np.ndarray:
         # pure bottom-model forward: cacheable per row (no masking —
         # masks are per-query and applied in send_embed)
-        return np.asarray(_member_fwd(self.params, self.x[rows]))
+        return np.asarray(self._fwd(self.params, self.x[rows]))
 
     def send_embed(self, u, rows) -> None:
         if self.masker is not None:
@@ -238,13 +305,22 @@ class SplitNNProtocol(VFLProtocol):
         return {"params": jax.tree.map(np.asarray, self.params),
                 "ef": self._ef_residuals()}
 
+    @staticmethod
+    def _as_tower(state):
+        """Migrate pre-§12 checkpoints: a flat legacy MLP layer list
+        becomes the one-block tower param tree."""
+        if state and isinstance(state[0], dict) and "w" in state[0]:
+            state = [state]
+        return jax.tree.map(jnp.asarray, list(state))
+
     def load_state_dict(self, state) -> None:
-        as_jax = functools.partial(jax.tree.map, jnp.asarray)
         if self.is_master:
-            self.top = as_jax(state["top"])
-            self.bottom = as_jax(state["bottom"])
+            self.top = self._as_tower(state["top"])
+            self.bottom = self._as_tower(state["bottom"])
         else:
-            self.params = as_jax(state["params"])
+            self.params = twr.shard_tower(
+                self._as_tower(state["params"]), self._spec,
+                self._rules)
         if state.get("ef"):
             from repro.core import compression
             # migrate pre-§7 checkpoints: the protocol-owned EF keyed

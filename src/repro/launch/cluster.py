@@ -287,6 +287,13 @@ class ClusterSpec:
     # flat [restart] keys, explicit [restart.<role>] entries override
     restart: Dict[str, RestartPolicy] = field(default_factory=dict)
     serve: Optional[ServeSpec] = None
+    # per-link overrides: [comm.<a>.<b>] tables, keyed by the (a, b)
+    # role pair. Edges are symmetric (shape both directions) and each
+    # pair appears once; values hold only edge-scoped keys (timeout,
+    # latency_ms, bandwidth_mbps, jitter_ms, loss) — resolved against
+    # the flat [comm] defaults by :meth:`comm_for`
+    comm_edges: Dict[Tuple[str, str], Dict[str, Any]] = \
+        field(default_factory=dict)
 
     # -- structure -----------------------------------------------------------
     @property
@@ -380,14 +387,70 @@ class ClusterSpec:
                 "[restart] elastic members are unsupported with secure "
                 "aggregation: a restarted member's pairwise masks "
                 "desync from the survivors'")
+        for (a, b) in self.comm_edges:
+            for r in (a, b):
+                if r not in have:
+                    raise ValueError(
+                        f"[comm.{a}.{b}] {r!r} is not an agent "
+                        f"(agents: {sorted(have)})")
+            if a == b:
+                raise ValueError(f"[comm.{a}.{b}] is a self-edge")
+            if (b, a) in self.comm_edges:
+                raise ValueError(
+                    f"[comm.{a}.{b}] duplicates [comm.{b}.{a}] — "
+                    f"edges are symmetric, name each pair once")
+        # composable towers (repro.models.tower): block structure is
+        # checkable now; concrete widths resolve at setup time from
+        # the data provider's feature slices
+        from repro.models.tower import check_blocks
+        for attr in ("tower", "top_tower"):
+            blocks = getattr(self.cfg, attr, ())
+            if blocks:
+                try:
+                    check_blocks(blocks)
+                except ValueError as e:
+                    raise ValueError(
+                        f"[protocol] {attr}: {e}") from None
+        if getattr(self.cfg, "tower_shard", 1) < 1:
+            raise ValueError("[protocol] tower_shard must be >= 1")
 
     # -- construction --------------------------------------------------------
+    _EDGE_LINK_KEYS = ("latency_ms", "bandwidth_mbps", "jitter_ms",
+                       "loss")
+
+    def comm_for(self, role: str) -> CommCfg:
+        """``role``'s effective :class:`CommCfg`: the flat ``[comm]``
+        defaults, plus ``peer_overrides`` for every ``[comm.a.b]``
+        edge touching ``role`` (edges are symmetric — both endpoints
+        shape the same link). Identical to ``self.comm`` when the spec
+        has no edge tables."""
+        from dataclasses import replace
+        over: Dict[str, CommCfg] = {}
+        for (a, b), ed in self.comm_edges.items():
+            peer = b if a == role else a if b == role else None
+            if peer is None:
+                continue
+            lk = {k: float(ed[k]) for k in self._EDGE_LINK_KEYS
+                  if k in ed}
+            link = self.comm.link
+            if lk:
+                link = replace(link or LinkSpec(), **lk)
+            over[peer] = replace(
+                self.comm, link=link,
+                timeout=float(ed["timeout"]) if "timeout" in ed
+                else self.comm.timeout,
+                peer_overrides=None)
+        if not over:
+            return self.comm
+        return replace(self.comm, peer_overrides=over)
+
     def make_communicator(self, role: str):
         """Build ``role``'s transport communicator with the full
-        address map and the spec's :class:`CommCfg` (TLS included)."""
+        address map and the spec's :class:`CommCfg` (TLS and per-link
+        ``[comm.a.b]`` overrides included)."""
         cls = SocketCommunicator if self.framing == "sock" \
             else GrpcCommunicator
-        comm = self.comm
+        comm = self.comm_for(role)
         if self.restartable_roles():
             # elastic clusters need drop attribution even for clean
             # EOFs: a SIGKILL'd agent's kernel closes its sockets
@@ -470,6 +533,25 @@ def _spec_from_dict(raw: Dict[str, Any],
             ckw[k] = comm_raw.pop(k)
     barrier = comm_raw.pop("barrier_timeout", 60.0)
     control_tls = comm_raw.pop("control_tls", True)
+    # per-link overrides: [comm.a.b] tables scope edge settings to the
+    # a<->b link; flat [comm] keys stay the every-edge default
+    edge_keys = ("timeout", "latency_ms", "bandwidth_mbps",
+                 "jitter_ms", "loss")
+    edges: Dict[Tuple[str, str], Dict[str, Any]] = {}
+    for a in [k for k, v in comm_raw.items() if isinstance(v, dict)]:
+        sub = comm_raw.pop(a)
+        for b, ed in sub.items():
+            if not isinstance(ed, dict):
+                raise ValueError(
+                    f"[comm.{a}] expected per-peer tables "
+                    f"([comm.{a}.<role>]), got key {b!r}")
+            unknown = set(ed) - set(edge_keys)
+            if unknown:
+                raise ValueError(
+                    f"[comm.{a}.{b}] unknown keys {sorted(unknown)} "
+                    f"(valid: {sorted(edge_keys)}; connection-level "
+                    f"settings like tls/nodelay stay in flat [comm])")
+            edges[(a, b)] = dict(ed)
     if comm_raw:
         raise ValueError(f"[comm] unknown keys {sorted(comm_raw)}")
     if link is not None:
@@ -542,7 +624,7 @@ def _spec_from_dict(raw: Dict[str, Any],
         run_phases=list(run.get("phases", ["fit"])),
         data_provider=provider, data_kwargs=data,
         barrier_timeout=float(barrier), control_tls=bool(control_tls),
-        chaos=chaos, restart=restart, serve=serve)
+        chaos=chaos, restart=restart, serve=serve, comm_edges=edges)
 
 
 # ---------------------------------------------------------------------------
@@ -785,6 +867,9 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
                     summary["serve"] = _serve_phase(spec, agent)
             res = agent.shutdown()
             summary["comm"] = _json_safe(res.get("comm"))
+            if res.get("roofline"):
+                # per-step compute-vs-wire split (launch/roofline.py)
+                summary["roofline"] = _json_safe(res["roofline"])
             status_q.put(("ok", role, summary))
         else:
             agent = PartyMember(comm, spec.cfg, callbacks=callbacks,
@@ -793,8 +878,10 @@ def _cluster_agent_main(spec: ClusterSpec, role: str, log_path: str,
                 else Arbiter(comm, spec.cfg, callbacks=callbacks)
             res = agent.serve(data, rejoin=rejoin) \
                 if role.startswith("member") else agent.serve()
-            status_q.put(("ok", role,
-                          {"comm": _json_safe(res.get("comm"))}))
+            out = {"comm": _json_safe(res.get("comm"))}
+            if res.get("roofline"):
+                out["roofline"] = _json_safe(res["roofline"])
+            status_q.put(("ok", role, out))
     except BaseException:
         tb = traceback.format_exc()
         print(tb, file=sys.stderr, flush=True)
