@@ -182,10 +182,13 @@ class CommCfg:
     peer). Connection-level fields (``tls``, ``nodelay``,
     ``encode_offload``, ``strict_eof``) stay world-level — a socket is
     configured before the engine knows which VFL edge it serves — and
-    the spec validator rejects them per-edge. Peers without an entry
-    use the flat world-level settings, including runtime
-    :meth:`PartyCommunicator.set_link` swaps (an override pins its
-    edge: chaos-scripted ``set_link`` does not touch it).
+    the spec validator rejects them per-edge. Each field pins its edge
+    only when the override actually sets it: a non-None ``link`` pins
+    that edge's shaping (chaos-scripted
+    :meth:`PartyCommunicator.set_link` does not touch it), while a
+    timeout-only override (``link=None``) keeps riding the shared
+    world link — the "*" bandwidth clock and runtime ``set_link``
+    swaps — exactly like peers with no entry at all.
 
     Example::
 
@@ -396,16 +399,18 @@ class PartyCommunicator(abc.ABC):
         self._link = self.cfg.link
         if self._link is not None and self._link == LinkSpec():
             self._link = None            # all-zero spec: no shaping
-        # per-edge overrides (CommCfg.peer_overrides): each overridden
-        # peer gets its own link spec + timeout; everyone else rides
-        # the world-level defaults above
+        # per-edge overrides (CommCfg.peer_overrides): link and timeout
+        # register independently, each only when the override sets it —
+        # a timeout-only override must NOT pin a private copy of the
+        # world link (it would get its own bandwidth clock and be
+        # exempt from runtime set_link chaos swaps). An explicit
+        # all-zero link pins the edge as unshaped.
         self._peer_links: Dict[str, Optional[LinkSpec]] = {}
         self._peer_timeouts: Dict[str, float] = {}
         for peer, ov in (self.cfg.peer_overrides or {}).items():
-            plink = ov.link
-            if plink is not None and plink == LinkSpec():
-                plink = None
-            self._peer_links[peer] = plink
+            if ov.link is not None:
+                self._peer_links[peer] = \
+                    None if ov.link == LinkSpec() else ov.link
             if ov.timeout is not None:
                 self._peer_timeouts[peer] = ov.timeout
         # link-shaping clocks (sender thread only), one per uplink:
@@ -678,8 +683,9 @@ class PartyCommunicator(abc.ABC):
         ``slow`` = inflated latency). Subsequent sends route through
         the sender thread and see the new link; a message racing the
         swap may be shaped under either spec (benign). Swaps the
-        *default* link only: edges pinned by
-        ``CommCfg.peer_overrides`` keep their own spec."""
+        *default* link only: edges whose ``CommCfg.peer_overrides``
+        entry sets a link keep their pinned spec (timeout-only
+        overrides ride the default link and follow the swap)."""
         if link is not None and link == LinkSpec():
             link = None                  # all-zero spec: no shaping
         self._link = link

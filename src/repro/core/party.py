@@ -66,6 +66,20 @@ def world_for(cfg: VFLConfig, n_members: int) -> List[str]:
     return world
 
 
+def _force_comm_timeout(cfg: CommCfg, timeout: float) -> CommCfg:
+    """``cfg`` with every per-message wait set to ``timeout`` — the
+    world-level default AND any ``peer_overrides`` entry, so
+    edge-pinned ``[comm.a.b]`` timeouts do not silently survive a
+    job-level ``comm_timeout`` override."""
+    import dataclasses
+    over = cfg.peer_overrides
+    if over:
+        over = {p: dataclasses.replace(o, timeout=timeout)
+                for p, o in over.items()}
+    return dataclasses.replace(cfg, timeout=timeout,
+                               peer_overrides=over)
+
+
 def _wrap_exc(e: BaseException) -> RuntimeError:
     """Picklable stand-in carrying the remote traceback text."""
     tb = "".join(traceback.format_exception(type(e), e, e.__traceback__))
@@ -305,7 +319,8 @@ class VFLJob:
                  comm_cfgs: Optional[Dict[str, CommCfg]] = None):
         """``pipeline_depth`` overrides ``cfg.pipeline_depth`` (1 =
         synchronous lock-step, D >= 2 = bounded-staleness pipelining);
-        ``comm_timeout`` overrides each transport's per-message wait;
+        ``comm_timeout`` overrides each transport's per-message wait
+        (including any edge-pinned ``[comm.a.b]`` timeouts);
         ``comm_cfg`` configures the transports in full — timeouts,
         Nagle, encode offload, and WAN link emulation
         (:class:`~repro.comm.base.LinkSpec`), e.g.::
@@ -325,12 +340,11 @@ class VFLJob:
         if pipeline_depth is not None:
             cfg = dataclasses.replace(cfg, pipeline_depth=pipeline_depth)
         if comm_timeout is not None:
-            comm_cfg = dataclasses.replace(comm_cfg or CommCfg(),
-                                           timeout=comm_timeout)
+            comm_cfg = _force_comm_timeout(comm_cfg or CommCfg(),
+                                           comm_timeout)
             if comm_cfgs is not None:
-                comm_cfgs = {w: dataclasses.replace(
-                    c, timeout=comm_timeout)
-                    for w, c in comm_cfgs.items()}
+                comm_cfgs = {w: _force_comm_timeout(c, comm_timeout)
+                             for w, c in comm_cfgs.items()}
 
         def _cfg_for(w: str) -> Optional[CommCfg]:
             if comm_cfgs is not None and w in comm_cfgs:

@@ -308,8 +308,13 @@ class SplitNNProtocol(VFLProtocol):
     @staticmethod
     def _as_tower(state):
         """Migrate pre-§12 checkpoints: a flat legacy MLP layer list
-        becomes the one-block tower param tree."""
-        if state and isinstance(state[0], dict) and "w" in state[0]:
+        becomes the one-block tower param tree. A legacy layer is a
+        dict of exactly ``{'w', 'b'}`` — new-format block entries
+        never look like that (an mlp block is a *list* of layers;
+        embed/attn dicts carry extra keys), so checking the full key
+        set keeps embed-first towers out of the legacy path."""
+        if (state and isinstance(state[0], dict)
+                and set(state[0]) == {"w", "b"}):
             state = [state]
         return jax.tree.map(jnp.asarray, list(state))
 

@@ -422,8 +422,12 @@ class ClusterSpec:
         """``role``'s effective :class:`CommCfg`: the flat ``[comm]``
         defaults, plus ``peer_overrides`` for every ``[comm.a.b]``
         edge touching ``role`` (edges are symmetric — both endpoints
-        shape the same link). Identical to ``self.comm`` when the spec
-        has no edge tables."""
+        shape the same link). An override carries only the fields its
+        edge table actually sets: a timeout-only edge keeps
+        ``link=None`` so the transport leaves it on the shared world
+        link (and runtime ``set_link`` swaps still reach it) instead
+        of pinning a private copy. Identical to ``self.comm`` when
+        the spec has no edge tables."""
         from dataclasses import replace
         over: Dict[str, CommCfg] = {}
         for (a, b), ed in self.comm_edges.items():
@@ -432,13 +436,12 @@ class ClusterSpec:
                 continue
             lk = {k: float(ed[k]) for k in self._EDGE_LINK_KEYS
                   if k in ed}
-            link = self.comm.link
-            if lk:
-                link = replace(link or LinkSpec(), **lk)
             over[peer] = replace(
-                self.comm, link=link,
+                self.comm,
+                link=replace(self.comm.link or LinkSpec(), **lk)
+                if lk else None,
                 timeout=float(ed["timeout"]) if "timeout" in ed
-                else self.comm.timeout,
+                else None,
                 peer_overrides=None)
         if not over:
             return self.comm

@@ -156,11 +156,17 @@ def check_blocks(blocks: Sequence[BlockLike]) -> List[Dict[str, Any]]:
                 f"tower block {i} ({kind}): unknown keys {sorted(extra)}")
         if kind == "embed" and i != 0:
             raise ValueError("'embed' must be the first tower block")
-        if kind == "attn_block" and (
-                not parsed[:i] or parsed[0]["kind"] != "embed"):
-            raise ValueError(
-                "'attn_block' needs an 'embed' block first (attention "
-                "runs on the token sequence it produces)")
+        if kind == "attn_block":
+            if not parsed[:i] or parsed[0]["kind"] != "embed":
+                raise ValueError(
+                    "'attn_block' needs an 'embed' block first "
+                    "(attention runs on the token sequence it "
+                    "produces)")
+            if any(p["kind"] == "mlp" for p in parsed[:i]):
+                raise ValueError(
+                    "'attn_block' must come before any 'mlp' block — "
+                    "'mlp' mean-pools the token sequence to flat "
+                    "features, leaving no sequence to attend over")
         if b.get("kernel", "auto") not in ("auto", "pallas", "ref"):
             raise ValueError(
                 f"tower block {i} ({kind}): kernel must be "

@@ -65,6 +65,8 @@ def test_parse_block_dsl():
     ((), "at least one block"),
     (("mlp", "embed"), "'embed' must be the first"),
     (("attn_block:heads=2", "mlp"), "needs an 'embed' block first"),
+    (("embed", "mlp", "attn_block:heads=2", "mlp"),
+     "must come before any 'mlp'"),
     (("embed", "mlp", "embed:tokens=2"), "'embed' must be the first"),
     (("embed",), "must be 'mlp'"),
     (("embed", "mlp", "quantize"), None),        # trailing quantize OK
@@ -172,6 +174,23 @@ def test_checkpoint_migrates_legacy_flat_layers():
     # already-nested state passes through unchanged
     again = SplitNNProtocol._as_tower(tower)
     assert again is tower or again == tower
+
+
+def test_checkpoint_roundtrip_preserves_tower_blocks():
+    """New-format checkpoints of embed-first towers must NOT trip the
+    legacy flat-MLP migration: the embed block's param dict contains
+    'w' too, and wrapping the whole tree as [state] collapses a 4-block
+    tower to 1 entry whose apply() silently pairs wrong params."""
+    spec = twr.resolve(TINY_TOWER, in_dim=5, out_dim=8)
+    params = twr.init(spec, jax.random.PRNGKey(2))
+    state = jax.tree.map(np.asarray, params)      # what state_dict saves
+    back = SplitNNProtocol._as_tower(state)
+    assert len(back) == len(spec.blocks) == 4
+    assert set(back[0]) == {"w", "table", "pos"}  # embed stayed block 0
+    x = np.random.default_rng(0).normal(size=(4, 5)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(twr.apply(spec, back, x)),
+        np.asarray(twr.apply(spec, params, x)), rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -362,9 +381,12 @@ def test_spec_edge_overrides_resolve_per_role():
     spec.validate()
     cm = spec.comm_for("master")
     assert cm.peer_overrides["member0"].link.latency_ms == 50.0
-    assert cm.peer_overrides["member0"].timeout == 30.0
-    # timeout-only edge keeps the default link
-    assert cm.peer_overrides["member1"].link.latency_ms == 1.0
+    # link-only edge: timeout unset, the transport falls back to the
+    # world-level 30.0 (so a job-level comm_timeout still reaches it)
+    assert cm.peer_overrides["member0"].timeout is None
+    # timeout-only edge: link unset — it rides the shared world link
+    # (and its "*" clock / runtime set_link swaps), not a pinned copy
+    assert cm.peer_overrides["member1"].link is None
     assert cm.peer_overrides["member1"].timeout == 5.0
     # symmetric: the member sees the same edge toward the master
     c0 = spec.comm_for("member0")
@@ -443,6 +465,47 @@ def test_engine_peer_timeout_override():
     with pytest.raises(TimeoutError):
         ca.recv("b", "never")
     ca.close()
+
+
+def test_timeout_only_override_follows_set_link():
+    """A [comm.a.b] edge that only customizes its timeout must not be
+    pinned: scripted chaos (set_link partition/slow) still shapes it."""
+    import time
+
+    from repro.comm.base import CommCfg, LinkSpec
+    from repro.comm.local import ThreadBus, ThreadCommunicator
+
+    bus = ThreadBus(["a", "b"])
+    cfg = CommCfg(timeout=60.0,
+                  peer_overrides={"b": CommCfg(timeout=30.0)})
+    ca = ThreadCommunicator("a", bus, comm_cfg=cfg)
+    cb = ThreadCommunicator("b", bus)
+    assert "b" not in ca._peer_links          # not pinned
+    ca.set_link(LinkSpec(latency_ms=80.0))
+    x = {"x": np.zeros(4)}
+    t0 = time.monotonic()
+    ca.send("b", "t", x)
+    cb.recv("a", "t")
+    assert time.monotonic() - t0 >= 0.07      # chaos swap reached it
+    for c in (ca, cb):
+        c.close()
+
+
+def test_comm_timeout_overrides_edge_pinned_timeouts():
+    """VFLJob's comm_timeout rewrites the per-message wait everywhere,
+    including timeouts pinned by [comm.a.b] peer_overrides."""
+    from repro.comm.base import CommCfg, LinkSpec
+    from repro.core.party import _force_comm_timeout
+
+    cfg = CommCfg(timeout=60.0, peer_overrides={
+        "member0": CommCfg(timeout=5.0,
+                           link=LinkSpec(latency_ms=3.0)),
+        "member1": CommCfg(timeout=5.0)})
+    out = _force_comm_timeout(cfg, 0.5)
+    assert out.timeout == 0.5
+    assert all(o.timeout == 0.5 for o in out.peer_overrides.values())
+    # link pins survive — only the waits are rewritten
+    assert out.peer_overrides["member0"].link.latency_ms == 3.0
 
 
 def test_vfljob_honors_comm_cfgs():
